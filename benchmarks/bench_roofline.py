@@ -1,0 +1,45 @@
+"""§Roofline — prints the roofline table from the saved dry-run artifacts
+(benchmarks/dryrun_results.json, produced by launch/dryrun.py --all
+--both-meshes). No compilation happens here; this reads the artifact."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+HERE = os.path.dirname(__file__)
+CANDIDATES = ["dryrun_results.json", "dryrun_1pod.json"]
+
+
+def main() -> None:
+    path = None
+    for c in CANDIDATES:
+        p = os.path.join(HERE, c)
+        if os.path.exists(p):
+            path = p
+            break
+    if path is None:
+        emit("roofline.missing", 0.0, "run launch/dryrun.py --all first")
+        return
+    with open(path) as f:
+        results = json.load(f)
+    for r in results:
+        if r["status"] != "ok":
+            if r["status"] == "skipped":
+                emit(f"roofline.{r['arch']}.{r['shape']}", 0.0, "skipped:" + r["why"][:40])
+            continue
+        rf = r["roofline"]
+        mesh = "2pod" if r.get("multi_pod") else "1pod"
+        emit(
+            f"roofline.{r['arch']}.{r['shape']}.{mesh}",
+            r["compile_s"] * 1e6,
+            f"compute_s={rf['compute_s']:.2e};memory_s={rf['memory_s']:.2e};"
+            f"collective_s={rf['collective_s']:.2e};bottleneck={rf['bottleneck']};"
+            f"useful_flops={rf['useful_flops_ratio']*100:.0f}%;"
+            f"peak_GiB={r['memory']['peak_bytes_per_device']/2**30:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

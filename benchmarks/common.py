@@ -1,0 +1,42 @@
+"""Shared benchmark utilities: CSV emission + scaled-universe builders."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The harness contract: ``name,us_per_call,derived`` CSV rows."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    t0 = time.time()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.time() - t0) / repeats
+    return out, dt * 1e6  # µs
+
+
+def small_universe(seed: int = 0, n: int = 3):
+    """A 3-KG universe big enough to show federation gains, small enough
+    for CI-speed benchmarks."""
+    from repro.kge.data import synthesize_universe
+
+    stats = [
+        ("Alpha", 14, 110000, 380000),
+        ("Beta", 10, 90000, 300000),
+        ("Gamma", 8, 70000, 230000),
+    ][:n]
+    names = {s[0] for s in stats}
+    aligns = [
+        a for a in [("Alpha", "Beta", 36000), ("Beta", "Gamma", 26000),
+                    ("Alpha", "Gamma", 22000)]
+        if a[0] in names and a[1] in names
+    ]
+    return synthesize_universe(seed=seed, scale=1 / 400,
+                               kg_stats=stats, alignments=aligns)

@@ -1,0 +1,62 @@
+"""Render EXPERIMENTS.md §Roofline tables from dryrun_results.json."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+HERE = os.path.dirname(__file__)
+
+
+def fmt(x):
+    return f"{x:.2e}"
+
+
+def main(path=None):
+    path = path or os.path.join(HERE, "dryrun_results.json")
+    with open(path) as f:
+        results = json.load(f)
+    rows_1pod = [r for r in results if r["status"] == "ok" and not r.get("multi_pod")]
+    rows_2pod = [r for r in results if r["status"] == "ok" and r.get("multi_pod")]
+    skips = {(r["arch"], r["shape"]) for r in results if r["status"] == "skipped"}
+
+    print("### Single-pod (16×16 = 256 chips) — full baseline table\n")
+    print("| arch | shape | kind | compute_s | memory_s | collective_s | bottleneck | useful FLOPs | peak GiB/dev | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(rows_1pod, key=lambda r: (r["arch"], r["shape"])):
+        rf = r["roofline"]
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | {fmt(rf['compute_s'])} "
+            f"| {fmt(rf['memory_s'])} | {fmt(rf['collective_s'])} | **{rf['bottleneck']}** "
+            f"| {rf['useful_flops_ratio']*100:.0f}% "
+            f"| {r['memory']['peak_bytes_per_device']/2**30:.2f} | {r['compile_s']:.0f} |"
+        )
+    print("\nSkipped (documented in DESIGN.md §4):",
+          ", ".join(f"{a}×{s}" for a, s in sorted(skips)))
+
+    print("\n### Two-pod (2×16×16 = 512 chips) — pod-axis sharding proof\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | bottleneck | peak GiB/dev |")
+    print("|---|---|---|---|---|---|---|")
+    for r in sorted(rows_2pod, key=lambda r: (r["arch"], r["shape"])):
+        rf = r["roofline"]
+        print(
+            f"| {r['arch']} | {r['shape']} | {fmt(rf['compute_s'])} | {fmt(rf['memory_s'])} "
+            f"| {fmt(rf['collective_s'])} | **{rf['bottleneck']}** "
+            f"| {r['memory']['peak_bytes_per_device']/2**30:.2f} |"
+        )
+
+    # candidates for the perf pass
+    def frac(r):
+        rf = r["roofline"]
+        dom = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        return rf["compute_s"] / dom if dom else 0.0
+
+    worst = sorted(rows_1pod, key=frac)[:5]
+    coll = sorted(rows_1pod, key=lambda r: -r["roofline"]["collective_s"])[:5]
+    print("\n### Hillclimb candidates")
+    print("worst compute fraction:", [(r["arch"], r["shape"], f"{frac(r)*100:.1f}%") for r in worst])
+    print("most collective-bound:", [(r["arch"], r["shape"], fmt(r["roofline"]["collective_s"])) for r in coll])
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else None)

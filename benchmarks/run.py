@@ -1,0 +1,60 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``--only <prefix>`` filters.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    bench_aggregation,
+    bench_alignment_scale,
+    bench_kernels,
+    bench_link_prediction,
+    bench_noise_ablation,
+    bench_privacy,
+    bench_roofline,
+    bench_time_cost,
+    bench_triple_classification,
+)
+
+SUITES = [
+    ("privacy", bench_privacy.main),             # §4.1.2 (ε̂ = 2.73)
+    ("kernels", bench_kernels.main),             # kernel parity + timing
+    ("roofline", bench_roofline.main),           # §Roofline from dry-run
+    ("time_cost", bench_time_cost.main),         # Fig. 7
+    ("triple_classification", bench_triple_classification.main),  # Fig. 4/5
+    ("link_prediction", bench_link_prediction.main),              # Tab. 4
+    ("noise_ablation", bench_noise_ablation.main),                # Tab. 5
+    ("alignment_scale", bench_alignment_scale.main),              # Tab. 6
+    ("aggregation", bench_aggregation.main),                      # Tab. 7
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in SUITES:
+        if args.only and not name.startswith(args.only):
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name}.FAILED,0.0,exception")
+        print(f"# suite {name} done in {time.time()-t0:.0f}s", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

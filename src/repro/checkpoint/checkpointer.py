@@ -1,0 +1,61 @@
+"""Sharding-aware npz checkpointing (no external deps).
+
+Pytrees are flattened to path-keyed arrays; on restore the tree is rebuilt
+and (optionally) device_put with the caller's shardings. Metadata (step,
+config hash) rides along as a JSON sidecar entry.
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.tree_util import DictKey, SequenceKey
+
+
+def _key_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(getattr(k, "name", k)))
+    return "/".join(parts)
+
+
+def save_checkpoint(path: str, tree: Any, *, metadata: Optional[Dict] = None) -> None:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {_key_str(p): np.asarray(v) for p, v in flat}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, __metadata__=json.dumps(metadata or {}), **arrays)
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, like: Any, *, shardings: Any = None) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). ``shardings`` optionally device_puts each leaf."""
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__metadata__"]))
+        paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for p, ref in paths:
+            key = _key_str(p)
+            if key not in z:
+                raise KeyError(f"checkpoint missing {key!r}")
+            arr = z[key]
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise ValueError(f"{key}: shape {arr.shape} != expected {ref.shape}")
+            leaves.append(arr.astype(ref.dtype))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves
+    )
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree, meta

@@ -1,0 +1,8 @@
+# The paper's primary contribution: PPAT (privacy-preserving adversarial
+# translation), PATE differential privacy, and the federated orchestrator.
+from repro.core.pate import pate_vote, teacher_votes  # noqa: F401
+from repro.core.privacy import MomentsAccountant  # noqa: F401
+from repro.core.ppat import PPATConfig, PPATHost, PPATClient, train_ppat  # noqa: F401
+from repro.core.alignment import csls, AlignmentRegistry  # noqa: F401
+from repro.core.aggregation import kgemb_update, virtual_extension  # noqa: F401
+from repro.core.federation import FederationScheduler, NodeState  # noqa: F401

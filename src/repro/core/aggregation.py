@@ -1,0 +1,118 @@
+"""KGEmb-Update — merging PPAT output back into a KG's embedding tables.
+
+Two pieces (§3.2.1 last paragraph + §4.3 Tab. 7):
+  * ``kgemb_update``: replace (or average into) the host's aligned-entity
+    embeddings with the DP-synthesized ``G(X)`` — and symmetrically let the
+    client adopt the unified embeddings.
+  * ``virtual_extension`` (FKGE vs FKGE-simple): the client additionally
+    translates the *neighbors* of aligned entities, G(N(X)), which the host
+    temporarily adds as virtual entities/relations + their adjacency triples
+    for the next local-training round; they are removed afterwards.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def kgemb_update(
+    trainer,
+    aligned_idx: np.ndarray,
+    synthesized: jnp.ndarray,
+    *,
+    mode: str = "average",
+) -> None:
+    """Write synthesized embeddings for ``aligned_idx`` into ``trainer``.
+
+    mode='replace' → paper's plain replacement; 'average' → FKGE's smoother
+    aggregation (Tab. 7 compares aggregation settings).
+    """
+    if mode == "replace":
+        new = synthesized
+    elif mode == "average":
+        cur = trainer.get_entity_embeddings(aligned_idx)
+        new = 0.5 * (cur + synthesized)
+    else:
+        raise ValueError(f"unknown aggregation mode {mode!r}")
+    trainer.set_entity_embeddings(aligned_idx, new)
+
+
+@dataclass
+class VirtualExtension:
+    """Bookkeeping to add & later strip virtual rows from a host trainer."""
+
+    n_virtual_ent: int
+    n_virtual_rel: int
+    extra_triples: np.ndarray  # (M, 3) in the extended id space
+
+
+def neighbor_structure(
+    kg, aligned_local: np.ndarray, *, max_neighbors: int = 2000
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Client side: N(X) — neighbor entities + joining relations of aligned
+    entities, and the adjacency triples (neighbor, relation, aligned).
+
+    Returns (neighbor_ids, relation_ids, triples[h_is_neighbor, r, t_aligned])
+    with ids local to the client KG."""
+    aligned = set(int(i) for i in aligned_local)
+    tri = kg.train
+    mask_t = np.fromiter((int(t) in aligned for t in tri[:, 2]), bool, len(tri))
+    mask_h = np.fromiter((int(h) in aligned for h in tri[:, 0]), bool, len(tri))
+    # triples whose tail is aligned: head is the virtual neighbor
+    tail_side = tri[mask_t & ~mask_h]
+    # triples whose head is aligned: tail is the virtual neighbor (reverse)
+    head_side = tri[mask_h & ~mask_t]
+    rows = []
+    for h, r, t in tail_side:
+        rows.append((int(h), int(r), int(t), 0))
+    for h, r, t in head_side:
+        rows.append((int(t), int(r), int(h), 1))  # store neighbor first
+    if not rows:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64), np.zeros((0, 4), np.int64)
+    rows = np.asarray(rows, np.int64)[:max_neighbors]
+    neigh = np.unique(rows[:, 0])
+    rels = np.unique(rows[:, 1])
+    return neigh, rels, rows
+
+
+def virtual_extension(
+    host_trainer,
+    client_trainer,
+    client_kg,
+    aligned_client: np.ndarray,
+    aligned_host: np.ndarray,
+    generate_fn,
+) -> Optional[VirtualExtension]:
+    """Extend the host KG with DP-translated virtual entities/relations.
+
+    ``generate_fn`` is the client's DP generator (embeddings → host space);
+    only G(N(X)) crosses the boundary, never raw client embeddings.
+    """
+    neigh, rels, rows = neighbor_structure(client_kg, aligned_client)
+    if len(rows) == 0:
+        return None
+    # translated (DP) embeddings of the neighbors and joining relations
+    v_ent = np.asarray(generate_fn(client_trainer.get_entity_embeddings(neigh)))
+    v_rel = np.asarray(generate_fn(client_trainer.get_relation_embeddings(rels)))
+
+    e0 = host_trainer.model.num_entities
+    r0 = host_trainer.model.num_relations
+    ent_map = {int(e): e0 + i for i, e in enumerate(neigh)}
+    rel_map = {int(r): r0 + i for i, r in enumerate(rels)}
+    align_map = {int(c): int(h) for c, h in zip(aligned_client, aligned_host)}
+
+    extra = []
+    for n, r, a, direction in rows:
+        host_a = align_map[int(a)]
+        vn, vr = ent_map[int(n)], rel_map[int(r)]
+        if direction == 0:  # (neighbor) -r-> (aligned)
+            extra.append((vn, vr, host_a))
+        else:  # (aligned) -r-> (neighbor)
+            extra.append((host_a, vr, vn))
+    extra = np.asarray(extra, np.int64)
+
+    host_trainer.extend_tables(jnp.asarray(v_ent), jnp.asarray(v_rel), extra)
+    return VirtualExtension(len(neigh), len(rels), extra)

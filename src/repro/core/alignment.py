@@ -1,0 +1,92 @@
+"""Aligned-entity registry + CSLS (cross-domain similarity local scaling).
+
+The paper assumes aligned entities/relations are given (matched via secure
+hash of canonical URIs — footnote 4). ``AlignmentRegistry`` plays that role:
+it stores, per KG pair, index arrays into each side's embedding tables.
+
+CSLS (MUSE, used by the student discriminator's input metric §3.2.1) scales
+cosine similarity by mean similarity to each point's k nearest neighbors,
+mitigating hubness. We use it as the translation-quality metric and expose a
+Pallas-accelerated path (kernels/csls) for large alignment sets.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def cosine_sim(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    an = a / (jnp.linalg.norm(a, axis=-1, keepdims=True) + 1e-9)
+    bn = b / (jnp.linalg.norm(b, axis=-1, keepdims=True) + 1e-9)
+    return an @ bn.T
+
+
+def csls(a: jnp.ndarray, b: jnp.ndarray, k: int = 10) -> jnp.ndarray:
+    """CSLS(a_i, b_j) = 2·cos(a_i, b_j) − r_B(a_i) − r_A(b_j)."""
+    sim = cosine_sim(a, b)  # (n, m)
+    kk = min(k, sim.shape[1])
+    kk2 = min(k, sim.shape[0])
+    r_a = jnp.mean(jnp.sort(sim, axis=1)[:, -kk:], axis=1)  # (n,)
+    r_b = jnp.mean(jnp.sort(sim, axis=0)[-kk2:, :], axis=0)  # (m,)
+    return 2 * sim - r_a[:, None] - r_b[None, :]
+
+
+def csls_retrieval_acc(a: jnp.ndarray, b: jnp.ndarray, k: int = 10) -> float:
+    """Fraction of rows whose CSLS-argmax is the correct (diagonal) match."""
+    s = csls(a, b, k)
+    return float(jnp.mean(jnp.argmax(s, axis=1) == jnp.arange(s.shape[0])))
+
+
+def procrustes(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Orthogonal R minimizing ||a·R − b||_F (MUSE refinement step).
+
+    Used HOST-LOCALLY on (DP-released G(X), host's own Y): post-processing a
+    differentially-private output together with data the processor already
+    owns, so it does not change the (ε, δ) guarantee of the release.
+    """
+    m = a.T @ b
+    u, _, vt = jnp.linalg.svd(m, full_matrices=False)
+    return u @ vt
+
+
+class AlignmentRegistry:
+    """Pairwise aligned entity/relation local-index maps between KGs."""
+
+    def __init__(self):
+        self._ent: Dict[Tuple[str, str], Tuple[np.ndarray, np.ndarray]] = {}
+        self._rel: Dict[Tuple[str, str], Tuple[np.ndarray, np.ndarray]] = {}
+
+    @staticmethod
+    def from_kgs(kgs: Dict[str, "object"]) -> "AlignmentRegistry":
+        reg = AlignmentRegistry()
+        names = list(kgs)
+        for i, a in enumerate(names):
+            for b in names[i + 1 :]:
+                ia, ib = kgs[a].aligned_with(kgs[b])
+                if len(ia):
+                    reg.add_entities(a, b, ia, ib)
+        return reg
+
+    def add_entities(self, a: str, b: str, idx_a, idx_b):
+        self._ent[(a, b)] = (np.asarray(idx_a), np.asarray(idx_b))
+        self._ent[(b, a)] = (np.asarray(idx_b), np.asarray(idx_a))
+
+    def add_relations(self, a: str, b: str, idx_a, idx_b):
+        self._rel[(a, b)] = (np.asarray(idx_a), np.asarray(idx_b))
+        self._rel[(b, a)] = (np.asarray(idx_b), np.asarray(idx_a))
+
+    def entities(self, a: str, b: str):
+        return self._ent.get((a, b))
+
+    def relations(self, a: str, b: str):
+        return self._rel.get((a, b))
+
+    def partners(self, a: str) -> List[str]:
+        return sorted({b for (x, b) in self._ent if x == a})
+
+    def num_aligned(self, a: str, b: str) -> int:
+        ent = self._ent.get((a, b))
+        rel = self._rel.get((a, b))
+        return (len(ent[0]) if ent else 0) + (len(rel[0]) if rel else 0)

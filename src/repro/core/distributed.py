@@ -1,0 +1,210 @@
+"""Mesh-mapped FKGE — the paper's process topology on a TPU mesh.
+
+The paper runs each KG owner as a GPU process and ships (batch, d) adversarial
+samples / gradients over OS pipes. On a pod we map each owner to a slice of
+the mesh along a ``party`` axis and the exchange becomes a
+``jax.lax.ppermute`` (collective-permute over ICI/DCI):
+
+    client slice:  adv = X_batch @ W          ──ppermute──►  host slice
+    host slice:    teachers/PATE/student step, ∂L_G/∂adv  ──ppermute──► client
+    client slice:  W ← W − lr·Xᵀ·∂L_G/∂adv
+
+Privacy boundary: the only tensors crossing slices are the generated samples
+and their gradients — exactly the paper's interface. Raw X and Y never leave
+their slice; this is verifiable in the lowered HLO (the collective-permute
+operands are (batch, d) and (batch, d), nothing else).
+
+Also provides a sharded KGE train step: the entity table is sharded over the
+``model`` axis (LOD-scale tables don't fit one device) and triple batches over
+``data``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.pate import pate_vote, teacher_votes
+from repro.core.ppat import PPATConfig, _disc_prob, _init_disc, _sgd_momentum
+
+
+def make_party_mesh(n_parties: int = 2) -> Mesh:
+    devs = jax.devices()[:n_parties]
+    return jax.make_mesh(
+        (n_parties,), ("party",), devices=devs,
+        axis_types=(jax.sharding.AxisType.Auto,),
+    )
+
+
+def init_distributed_ppat(key, dim: int, cfg: PPATConfig):
+    """Host discriminator params + client W, replicated pytree."""
+    kt, ks = jax.random.split(key)
+    teachers = jax.vmap(lambda k: _init_disc(k, dim, cfg.hidden))(
+        jax.random.split(kt, cfg.num_teachers)
+    )
+    student = _init_disc(ks, dim, cfg.hidden)
+    return {
+        "teachers": teachers,
+        "teachers_vel": jax.tree.map(jnp.zeros_like, teachers),
+        "student": student,
+        "student_vel": jax.tree.map(jnp.zeros_like, student),
+        "w": jnp.eye(dim, dtype=jnp.float32),
+        "w_vel": jnp.zeros((dim, dim), jnp.float32),
+    }
+
+
+def ppat_exchange_step(mesh: Mesh, cfg: PPATConfig):
+    """Build the SPMD one-round function.
+
+    Layout: party 0 = client (holds x batches), party 1 = host (holds y
+    batches). SPMD means both slices execute the same program on their local
+    shard; role-irrelevant results are masked out. The two ppermutes in the
+    lowered HLO are the paper's pipe sends.
+    """
+
+    def step(state, xb, yb, key):
+        # xb: (2, B, d) party-sharded — party 0's slice is the real X batch.
+        # yb: (2, B, d) — party 1's slice is the real Y batch.
+        def spmd(state, xb, yb, key):
+            party = jax.lax.axis_index("party")
+            xb = xb[0]  # local shard (1, B, d) → (B, d)
+            yb = yb[0]
+            key = key[0]
+
+            # --- client role: generate adversarial samples ----------------
+            adv_local = xb @ state["w"]
+            # pipe: client → host (0 → 1)
+            adv = jax.lax.ppermute(adv_local, "party", [(0, 1), (1, 0)])
+            # on party 1, ``adv`` now holds the client's generated batch
+
+            # --- host role: teachers + PATE + student ---------------------
+            t = cfg.num_teachers
+            b, d = adv.shape
+            per = b // t
+            adv_parts = adv[: per * t].reshape(t, per, d)
+            real_parts = yb[: per * t].reshape(t, per, d)
+
+            def teacher_loss(tp, fake, re):
+                pf = _disc_prob(tp, fake)
+                pr = _disc_prob(tp, re)
+                return -(jnp.mean(jnp.log(1 - pf + 1e-8)) + jnp.mean(jnp.log(pr + 1e-8)))
+
+            t_losses, t_grads = jax.vmap(jax.value_and_grad(teacher_loss))(
+                state["teachers"], adv_parts, real_parts
+            )
+            is_host = (party == 1).astype(jnp.float32)
+            t_grads = jax.tree.map(lambda g: g * is_host, t_grads)
+            new_teachers, new_tvel = _sgd_momentum(
+                state["teachers"], t_grads, state["teachers_vel"], cfg.lr, cfg.momentum
+            )
+
+            probs = jax.vmap(lambda tp: _disc_prob(tp, adv))(new_teachers)
+            labels, n0, n1 = pate_vote(key, teacher_votes(probs), cfg.lam)
+
+            def student_loss(sp):
+                ps = _disc_prob(sp, adv)
+                return -jnp.mean(
+                    labels * jnp.log(ps + 1e-8) + (1 - labels) * jnp.log(1 - ps + 1e-8)
+                )
+
+            s_loss, s_grads = jax.value_and_grad(student_loss)(state["student"])
+            s_grads = jax.tree.map(lambda g: g * is_host, s_grads)
+            new_student, new_svel = _sgd_momentum(
+                state["student"], s_grads, state["student_vel"], cfg.lr, cfg.momentum
+            )
+
+            def gen_loss(a):
+                ps = _disc_prob(new_student, a)
+                if cfg.saturating:
+                    return jnp.mean(jnp.log(1 - ps + 1e-8))
+                return -jnp.mean(jnp.log(ps + 1e-8))
+
+            g_loss, grad_adv = jax.value_and_grad(gen_loss)(adv)
+            # pipe: host → client (1 → 0)
+            grad_back = jax.lax.ppermute(grad_adv, "party", [(1, 0), (0, 1)])
+
+            # --- client role: apply chain rule to W -----------------------
+            is_client = (party == 0).astype(jnp.float32)
+            gw = (xb.T @ grad_back) * is_client
+            new_wvel = cfg.momentum * state["w_vel"] + gw
+            new_w = state["w"] - cfg.lr * new_wvel
+            if cfg.ortho_beta:
+                bta = cfg.ortho_beta
+                new_w = (1 + bta) * new_w - bta * (new_w @ new_w.T) @ new_w
+            new_w = jnp.where(is_client > 0, new_w, state["w"])
+
+            new_state = {
+                "teachers": new_teachers,
+                "teachers_vel": new_tvel,
+                "student": new_student,
+                "student_vel": new_svel,
+                "w": new_w,
+                "w_vel": jnp.where(is_client > 0, new_wvel, state["w_vel"]),
+            }
+            # replicate role-owned state across parties so the pytree stays
+            # consistent: host owns discriminators, client owns W.
+            sync = lambda v, owner: jax.lax.ppermute(
+                v, "party", [(owner, 1 - owner)]
+            ) * (1 - _mine(party, owner)) + v * _mine(party, owner)
+
+            def _mine(p, owner):
+                return (p == owner).astype(jnp.float32)
+
+            for k in ("teachers", "teachers_vel", "student", "student_vel"):
+                new_state[k] = jax.tree.map(lambda v: sync(v, 1), new_state[k])
+            for k in ("w", "w_vel"):
+                new_state[k] = sync(new_state[k], 0)
+            # metrics get a leading local axis so out_specs can concatenate
+            # them over parties; row 1 (the host) is the authoritative one.
+            metrics = {
+                "gen_loss": g_loss[None],
+                "student_loss": s_loss[None],
+                "teacher_loss": jnp.mean(t_losses)[None],
+            }
+            return new_state, metrics, (n0, n1)
+
+        fn = jax.shard_map(
+            spmd,
+            mesh=mesh,
+            in_specs=(P(), P("party"), P("party"), P("party")),
+            out_specs=(P(), P("party"), P("party")),
+            check_vma=False,
+        )
+        return fn(state, xb, yb, key)
+
+    return jax.jit(step)
+
+
+# ---------------------------------------------------------------- sharded KGE
+def make_sharded_kge_step(mesh: Mesh, model, *, lr: float):
+    """Data-parallel margin-loss step with the entity table sharded over
+    'model' and triple batches over 'data' — the substrate FKGE rides on for
+    LOD-scale KGs (1.4M × d tables)."""
+    from repro.kge.models import margin_loss, score_triples
+
+    ent_spec = P("model", None)
+    rel_spec = P(None, None)
+
+    def step(params, pos, neg):
+        def loss_fn(p):
+            sp = score_triples(p, model, pos[:, 0], pos[:, 1], pos[:, 2])
+            sn = score_triples(p, model, neg[:, 0], neg[:, 1], neg[:, 2])
+            return margin_loss(sp, sn, model.margin)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params = jax.tree.map(lambda x, g: x - lr * g, params, grads)
+        return params, loss
+
+    in_shardings = (
+        {"ent": NamedSharding(mesh, ent_spec), "rel": NamedSharding(mesh, rel_spec)},
+        NamedSharding(mesh, P("data", None)),
+        NamedSharding(mesh, P("data", None)),
+    )
+    out_shardings = (
+        {"ent": NamedSharding(mesh, ent_spec), "rel": NamedSharding(mesh, rel_spec)},
+        NamedSharding(mesh, P()),
+    )
+    return jax.jit(step, in_shardings=in_shardings, out_shardings=out_shardings)

@@ -1,0 +1,264 @@
+"""Federated training orchestrator — §3.3, Alg. 1, Fig. 2.
+
+Implements the handshake protocol faithfully as a host-side scheduler:
+  * states Ready / Busy / Sleep per KG owner;
+  * a handshake queue per owner: entries are client KGs offering to federate
+    (their generator vs. our discriminators);
+  * KGEmb-Update: PPAT → aggregate synthesized embeddings (+ optional
+    virtual entities) → local retrain → score;
+  * Backtrack: keep new embeddings only if the score improved, else restore
+    the previous snapshot (Alg. 1 l. 17);
+  * Broadcast: on improvement, send handshake signals to every partner with
+    shared aligned entities (Alg. 1 l. 30).
+
+The paper's wall-clock asynchrony (OS processes sleeping/waking) is modeled
+as scheduler ticks: each tick serves every Ready owner once. This preserves
+the protocol semantics (pairing, queueing, backtracking, broadcast-wakeup)
+without real multi-process execution — see DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import enum
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import kgemb_update, virtual_extension
+from repro.core.alignment import AlignmentRegistry
+from repro.core.ppat import PPATConfig, train_ppat
+from repro.kge.eval import triple_classification_accuracy
+from repro.kge.trainer import KGETrainer
+
+
+class NodeState(enum.Enum):
+    READY = "ready"
+    BUSY = "busy"
+    SLEEP = "sleep"
+
+
+@dataclass
+class FederationEvent:
+    tick: int
+    host: str
+    client: Optional[str]
+    kind: str  # "ppat" | "self-train" | "init"
+    score_before: float
+    score_after: float
+    accepted: bool
+    epsilon: float = float("nan")
+    seconds: float = 0.0
+
+
+class FederationScheduler:
+    def __init__(
+        self,
+        kgs: Dict[str, object],
+        *,
+        families: Optional[Dict[str, str]] = None,
+        dim: int = 64,
+        registry: Optional[AlignmentRegistry] = None,
+        ppat_cfg: Optional[PPATConfig] = None,
+        aggregation: str = "average",
+        procrustes_refine: bool = True,
+        use_virtual: bool = True,
+        local_epochs: int = 50,
+        update_epochs: int = 25,
+        score_fn: Optional[Callable] = None,
+        score_split: str = "valid",
+        seed: int = 0,
+        margin: float = 2.0,
+    ):
+        # score_split="test" reproduces Alg. 1 verbatim (the paper backtracks
+        # on g_j.test); "valid" (default) is the leakage-free variant.
+        self.score_split = score_split
+        self.kgs = kgs
+        self.registry = registry or AlignmentRegistry.from_kgs(kgs)
+        families = families or {n: "transe" for n in kgs}
+        self.trainers: Dict[str, KGETrainer] = {
+            n: KGETrainer(kg, families[n], dim=dim, seed=seed + i, margin=margin)
+            for i, (n, kg) in enumerate(kgs.items())
+        }
+        self.ppat_cfg = ppat_cfg or PPATConfig(seed=seed)
+        self.aggregation = aggregation
+        self.procrustes_refine = procrustes_refine
+        self.use_virtual = use_virtual
+        self.local_epochs = local_epochs
+        self.update_epochs = update_epochs
+        self.score_fn = score_fn or self._valid_accuracy
+        self.state: Dict[str, NodeState] = {n: NodeState.READY for n in kgs}
+        self.queue: Dict[str, deque] = {n: deque() for n in kgs}
+        self.best_score: Dict[str, float] = {}
+        self.best_snapshot: Dict[str, dict] = {}
+        self.events: List[FederationEvent] = []
+        self.epsilons: List[float] = []
+        self._tick = 0
+        self._key = jax.random.PRNGKey(seed + 101)
+
+    # ------------------------------------------------------------ scoring
+    def _valid_accuracy(self, name: str) -> float:
+        tr = self.trainers[name]
+        kg = self.kgs[name]
+        rng = np.random.default_rng(0)  # fixed negatives → comparable scores
+        from repro.kge.data import corrupt_triples
+        from repro.kge.models import score_triples
+
+        va = kg.test if self.score_split == "test" else kg.valid
+        va_neg = corrupt_triples(rng, va, kg.num_entities)
+
+        def s(t):
+            t = jnp.asarray(t)
+            return np.asarray(
+                score_triples(tr.params, tr.model, t[:, 0], t[:, 1], t[:, 2])
+            )
+
+        sp, sn = s(va), s(va_neg)
+        cand = np.unique(np.concatenate([sp, sn]))
+        if len(cand) > 256:
+            cand = cand[:: len(cand) // 256]
+        acc = [((sp >= c).mean() + (sn < c).mean()) / 2.0 for c in cand]
+        return float(np.max(acc))
+
+    # ------------------------------------------------------ initial train
+    def initial_training(self, epochs: Optional[int] = None) -> Dict[str, float]:
+        """Alg. 1 ll. 2–4: local training to the best initial score."""
+        epochs = epochs or self.local_epochs
+        for name, tr in self.trainers.items():
+            tr.train_epochs(epochs)
+            score = self.score_fn(name)
+            self.best_score[name] = score
+            self.best_snapshot[name] = tr.snapshot()
+            self.events.append(
+                FederationEvent(self._tick, name, None, "init", 0.0, score, True)
+            )
+        # everyone announces itself once training is done (Fig. 2, round 1)
+        for name in self.trainers:
+            self.broadcast(name)
+        return dict(self.best_score)
+
+    # --------------------------------------------------------- primitives
+    def broadcast(self, name: str) -> None:
+        """Send handshake signal to all partners with aligned entities."""
+        for partner in self.registry.partners(name):
+            if name not in self.queue[partner]:
+                self.queue[partner].append(name)
+            if self.state[partner] is NodeState.SLEEP:
+                self.state[partner] = NodeState.READY  # wake-up signal
+
+    def federate_once(self, host: str, client: str) -> FederationEvent:
+        """ActiveHandshake + KGEmb-Update + Backtrack for one (client, host)."""
+        t0 = time.time()
+        self.state[host] = NodeState.BUSY
+        ent = self.registry.entities(client, host)
+        rel = self.registry.relations(client, host)
+        cli_tr, hos_tr = self.trainers[client], self.trainers[host]
+
+        idx_c, idx_h = ent
+        x = cli_tr.get_entity_embeddings(idx_c)
+        y = hos_tr.get_entity_embeddings(idx_h)
+        if rel is not None and len(rel[0]):
+            x = jnp.concatenate([x, cli_tr.get_relation_embeddings(rel[0])])
+            y = jnp.concatenate([y, hos_tr.get_relation_embeddings(rel[1])])
+
+        self._key, sub = jax.random.split(self._key)
+        ppat_client, ppat_host, hist = train_ppat(x, y, self.ppat_cfg, key=sub)
+        self.epsilons.append(hist["epsilon"])
+
+        # DP-synthesized embeddings for the aligned set, host side
+        synth = ppat_client.generate(x)
+        refine = None
+        if self.procrustes_refine:
+            # host-local MUSE refinement: post-processing of the DP release
+            # with host-private Y — does not change the (ε, δ) guarantee.
+            from repro.core.alignment import procrustes
+
+            refine = procrustes(synth, y)
+            synth = synth @ refine
+        n_ent = len(idx_c)
+        kgemb_update(hos_tr, idx_h, synth[:n_ent], mode=self.aggregation)
+        if rel is not None and len(rel[0]):
+            cur = hos_tr.get_relation_embeddings(rel[1])
+            new = synth[n_ent:]
+            if self.aggregation == "average":
+                new = 0.5 * (cur + new)
+            hos_tr.set_relation_embeddings(rel[1], new)
+
+        ve = None
+        if self.use_virtual:
+            gen = (
+                ppat_client.generate
+                if refine is None
+                else (lambda e: ppat_client.generate(e) @ refine)
+            )
+            ve = virtual_extension(
+                hos_tr, cli_tr, self.kgs[client], idx_c, idx_h, gen
+            )
+        hos_tr.train_epochs(self.update_epochs)  # KGEmb-Update retrain
+        if ve is not None:
+            hos_tr.strip_virtual()
+
+        before = self.best_score[host]
+        after = self.score_fn(host)
+        accepted = after > before
+        if accepted:  # Backtrack (Alg. 1 l. 17)
+            self.best_score[host] = after
+            self.best_snapshot[host] = hos_tr.snapshot()
+        else:
+            hos_tr.restore(self.best_snapshot[host])
+        self.state[host] = NodeState.READY
+        ev = FederationEvent(
+            self._tick, host, client, "ppat", before, after, accepted,
+            epsilon=hist["epsilon"], seconds=time.time() - t0,
+        )
+        self.events.append(ev)
+        if accepted:
+            self.broadcast(host)
+        return ev
+
+    def self_train_once(self, name: str) -> FederationEvent:
+        """Alg. 1 ll. 23–27: local iterative training when the queue is empty."""
+        t0 = time.time()
+        tr = self.trainers[name]
+        tr.train_epochs(self.update_epochs)
+        before = self.best_score[name]
+        after = self.score_fn(name)
+        accepted = after > before
+        if accepted:
+            self.best_score[name] = after
+            self.best_snapshot[name] = tr.snapshot()
+            self.broadcast(name)
+        else:
+            tr.restore(self.best_snapshot[name])
+        ev = FederationEvent(
+            self._tick, name, None, "self-train", before, after, accepted,
+            seconds=time.time() - t0,
+        )
+        self.events.append(ev)
+        return ev
+
+    # -------------------------------------------------------------- loop
+    def run(self, max_ticks: int = 6, *, self_train: bool = True) -> Dict[str, float]:
+        """Scheduler ticks until quiescence (all queues empty, no improvement)
+        or ``max_ticks``. Each tick serves every Ready owner once."""
+        for _ in range(max_ticks):
+            self._tick += 1
+            any_progress = False
+            for name in self.trainers:
+                if self.state[name] is not NodeState.READY:
+                    continue
+                if self.queue[name]:
+                    client = self.queue[name].popleft()
+                    ev = self.federate_once(name, client)
+                    any_progress = any_progress or ev.accepted
+                elif self_train:
+                    ev = self.self_train_once(name)
+                    any_progress = any_progress or ev.accepted
+                else:
+                    self.state[name] = NodeState.SLEEP
+            if not any_progress and all(not q for q in self.queue.values()):
+                break  # "whole training continues until no more improvement"
+        return dict(self.best_score)

@@ -1,0 +1,45 @@
+"""PATE mechanism — Eqs. (5)–(6) of the paper.
+
+Teacher discriminators vote {0,1} per sample; i.i.d. Laplace(λ) noise is added
+to each class's vote count and the noisy argmax becomes the student's label.
+Vectorized over the teacher axis (the paper trains |T| separate nets; we hold
+them as one stacked pytree and ``vmap``) and over the sample batch.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def teacher_votes(probs: jnp.ndarray) -> jnp.ndarray:
+    """probs: (T, B) teacher sigmoid outputs → hard votes (T, B) in {0,1}."""
+    return (probs >= 0.5).astype(jnp.int32)
+
+
+def pate_vote(
+    key: jax.Array, votes: jnp.ndarray, lam: float
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Noisy-argmax aggregation (Eq. 5).
+
+    votes: (T, B) hard {0,1} votes → (labels (B,), n0 (B,), n1 (B,)).
+    ``n0``/``n1`` are the *clean* counts — the accountant (Eq. 10) consumes
+    them; only the released labels carry the noise.
+
+    λ semantics: the paper's Tab. 1 calls λ the "noise (scale)", but Eqs.
+    (9)–(10) are PATE's Theorems 2–3 verbatim, in which the noise is
+    Lap(1/γ) with γ≡λ. We follow the equations (noise scale = 1/λ) so the
+    accountant and the mechanism are consistent; λ=0 disables noise (the
+    Tab. 5 "No noise" column — no DP guarantee). The ambiguity is recorded
+    in EXPERIMENTS.md.
+    """
+    t, b = votes.shape
+    n1 = jnp.sum(votes, axis=0)  # (B,)
+    n0 = t - n1
+    scale = 0.0 if lam <= 0 else 1.0 / lam
+    noise = jax.random.laplace(key, (2, b)) * scale
+    noisy0 = n0.astype(jnp.float32) + noise[0]
+    noisy1 = n1.astype(jnp.float32) + noise[1]
+    labels = (noisy1 > noisy0).astype(jnp.float32)
+    return labels, n0, n1

@@ -1,0 +1,232 @@
+"""PPAT — privacy-preserving adversarial translation network (§3.2).
+
+Structure (Fig. 3):
+  client (g_i): generator G(X) = W·X, the MUSE-style translation matrix.
+  host  (g_j): |T| teacher discriminators on disjoint partitions + one
+               student discriminator trained with PATE noisy labels.
+
+The privacy boundary is enforced *structurally*: ``PPATClient`` and
+``PPATHost`` expose exactly the interface of Alg. 2 — the client only ever
+ships generated samples ``G(X)`` (size batch×d) to the host; the host only
+ever ships ``∂L_G/∂G(X)`` (size batch×d) back. Neither object ever reads the
+other's raw embeddings. The ``train_ppat`` driver moves only those two
+tensors per round, mirroring the paper's pipe IPC (and the mesh-mapped
+variant in ``core.distributed`` moves them via collective-permute).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pate import pate_vote, teacher_votes
+from repro.core.privacy import MomentsAccountant
+
+
+@dataclass(frozen=True)
+class PPATConfig:
+    """§4.1.1: batch 32, 4 teachers, lr 0.02, momentum 0.9; §4.1.2: λ=0.05."""
+
+    batch: int = 32
+    num_teachers: int = 4
+    lr: float = 0.02
+    momentum: float = 0.9
+    hidden: int = 128
+    steps: int = 200
+    lam: float = 0.05
+    delta: float = 1e-5
+    ortho_beta: float = 0.001  # MUSE orthogonality stabilizer for W
+    saturating: bool = False   # Eq. 3 verbatim (True) vs non-saturating fix
+    seed: int = 0
+
+
+# ---------------------------------------------------------------- discriminators
+def _init_disc(key, d: int, hidden: int) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (d, hidden), jnp.float32) / np.sqrt(d),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": jax.random.normal(k2, (hidden, 1), jnp.float32) / np.sqrt(hidden),
+        "b2": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def _disc_prob(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.leaky_relu(x @ p["w1"] + p["b1"], 0.2)
+    return jax.nn.sigmoid((h @ p["w2"] + p["b2"])[..., 0])
+
+
+def _sgd_momentum(params, grads, vel, lr, mom):
+    new_vel = jax.tree.map(lambda v, g: mom * v + g, vel, grads)
+    new_params = jax.tree.map(lambda p, v: p - lr * v, params, new_vel)
+    return new_params, new_vel
+
+
+# ---------------------------------------------------------------- host step (jit)
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _host_step(
+    host_params: dict,
+    key: jax.Array,
+    adv: jnp.ndarray,  # (B, d) generated samples — the ONLY client input
+    real: jnp.ndarray,  # (B, d) host-side real batch (never leaves the host)
+    cfg: PPATConfig,
+):
+    t = cfg.num_teachers
+    b, d = adv.shape
+    per = b // t
+    adv_parts = adv[: per * t].reshape(t, per, d)
+    real_parts = real[: per * t].reshape(t, per, d)
+
+    # --- teacher update (Eq. 4), one vmapped step over the teacher axis ----
+    def teacher_loss(tp, fake, re):
+        pf = _disc_prob(tp, fake)
+        pr = _disc_prob(tp, re)
+        return -(jnp.mean(jnp.log(1 - pf + 1e-8)) + jnp.mean(jnp.log(pr + 1e-8)))
+
+    t_losses, t_grads = jax.vmap(jax.value_and_grad(teacher_loss))(
+        host_params["teachers"], adv_parts, real_parts
+    )
+    new_teachers, new_tvel = _sgd_momentum(
+        host_params["teachers"], t_grads, host_params["teachers_vel"],
+        cfg.lr, cfg.momentum,
+    )
+
+    # --- PATE voting on the full adv batch (Eqs. 5–6) ----------------------
+    probs = jax.vmap(lambda tp: _disc_prob(tp, adv))(new_teachers)  # (T, B)
+    votes = teacher_votes(probs)
+    labels, n0, n1 = pate_vote(key, votes, cfg.lam)
+
+    # --- student update (Eq. 7): BCE on generated samples w/ noisy labels --
+    def student_loss(sp):
+        ps = _disc_prob(sp, adv)
+        return -jnp.mean(
+            labels * jnp.log(ps + 1e-8) + (1 - labels) * jnp.log(1 - ps + 1e-8)
+        )
+
+    s_loss, s_grads = jax.value_and_grad(student_loss)(host_params["student"])
+    new_student, new_svel = _sgd_momentum(
+        host_params["student"], s_grads, host_params["student_vel"],
+        cfg.lr, cfg.momentum,
+    )
+
+    # --- generator loss (Eq. 3) against the updated student; grad wrt adv --
+    # Eq. 3 is the saturating form log(1−S(G(x))); by default we use the
+    # standard non-saturating equivalent −log S(G(x)) (Goodfellow et al.),
+    # which has the same fixed point but does not stall when the student
+    # wins early. cfg.saturating=True restores the verbatim Eq. 3.
+    def gen_loss(a):
+        ps = _disc_prob(new_student, a)
+        if cfg.saturating:
+            return jnp.mean(jnp.log(1 - ps + 1e-8))
+        return -jnp.mean(jnp.log(ps + 1e-8))
+
+    g_loss, grad_adv = jax.value_and_grad(gen_loss)(adv)
+
+    new_params = {
+        "teachers": new_teachers,
+        "teachers_vel": new_tvel,
+        "student": new_student,
+        "student_vel": new_svel,
+    }
+    metrics = {
+        "teacher_loss": jnp.mean(t_losses),
+        "student_loss": s_loss,
+        "gen_loss": g_loss,
+        "vote_mean": jnp.mean(labels),
+    }
+    return new_params, grad_adv, metrics, (n0, n1)
+
+
+class PPATHost:
+    """g_j side: all discriminators + the moments accountant (§3.2.2)."""
+
+    def __init__(self, key, dim: int, y: jnp.ndarray, cfg: PPATConfig):
+        self.cfg = cfg
+        self.y = y  # host embeddings of aligned entities/relations — private
+        kt, ks = jax.random.split(key)
+        teachers = jax.vmap(lambda k: _init_disc(k, dim, cfg.hidden))(
+            jax.random.split(kt, cfg.num_teachers)
+        )
+        student = _init_disc(ks, dim, cfg.hidden)
+        self.params = {
+            "teachers": teachers,
+            "teachers_vel": jax.tree.map(jnp.zeros_like, teachers),
+            "student": student,
+            "student_vel": jax.tree.map(jnp.zeros_like, student),
+        }
+        self.accountant = MomentsAccountant(cfg.lam, cfg.delta)
+        self._rng = np.random.default_rng(cfg.seed + 17)
+
+    def step(self, key: jax.Array, adv: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+        """Receive generated samples; return ∂L_G/∂adv + public metrics."""
+        idx = self._rng.integers(0, len(self.y), len(adv))
+        real = self.y[jnp.asarray(idx)]
+        self.params, grad_adv, metrics, (n0, n1) = _host_step(
+            self.params, key, adv, real, self.cfg
+        )
+        self.accountant.update(np.asarray(n0), np.asarray(n1))
+        return grad_adv, {k: float(v) for k, v in metrics.items()}
+
+
+class PPATClient:
+    """g_i side: the translation matrix W (= θ_G) and its optimizer."""
+
+    def __init__(self, key, dim: int, x: jnp.ndarray, cfg: PPATConfig):
+        self.cfg = cfg
+        self.x = x  # client embeddings of aligned entities/relations — private
+        self.w = jnp.eye(dim, dtype=jnp.float32)
+        self.vel = jnp.zeros_like(self.w)
+        self._rng = np.random.default_rng(cfg.seed + 29)
+
+    def sample_batch(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        idx = self._rng.integers(0, len(self.x), self.cfg.batch)
+        xb = self.x[jnp.asarray(idx)]
+        return xb, self.generate(xb)
+
+    def generate(self, xb: jnp.ndarray) -> jnp.ndarray:
+        return xb @ self.w
+
+    def apply_grad(self, xb: jnp.ndarray, grad_adv: jnp.ndarray) -> None:
+        """Chain rule through G(X)=XW: ∂L/∂W = Xᵀ·∂L/∂G(X)."""
+        gw = xb.T @ grad_adv
+        self.vel = self.cfg.momentum * self.vel + gw
+        self.w = self.w - self.cfg.lr * self.vel
+        if self.cfg.ortho_beta:
+            b = self.cfg.ortho_beta  # MUSE-style orthogonalization
+            self.w = (1 + b) * self.w - b * (self.w @ self.w.T) @ self.w
+
+
+def train_ppat(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    cfg: Optional[PPATConfig] = None,
+    *,
+    key: Optional[jax.Array] = None,
+) -> Tuple[PPATClient, PPATHost, Dict]:
+    """Run Alg. 2 between a client embedding set X and host set Y.
+
+    Returns the trained (client, host) pair and a history dict; the caller
+    obtains DP-synthesized embeddings via ``client.generate(...)`` and the
+    privacy estimate via ``host.accountant.epsilon()``.
+    """
+    cfg = cfg or PPATConfig()
+    key = key if key is not None else jax.random.PRNGKey(cfg.seed)
+    dim = x.shape[1]
+    kh, kc = jax.random.split(key)
+    host = PPATHost(kh, dim, y, cfg)
+    client = PPATClient(kc, dim, x, cfg)
+    history = {"gen_loss": [], "student_loss": [], "teacher_loss": []}
+    for step in range(cfg.steps):
+        key, sub = jax.random.split(key)
+        xb, adv = client.sample_batch()          # client → host: adv only
+        grad_adv, metrics = host.step(sub, adv)  # host → client: grads only
+        client.apply_grad(xb, grad_adv)
+        for k in history:
+            history[k].append(metrics[k])
+    history["epsilon"] = host.accountant.epsilon()
+    history["max_alpha"] = host.accountant.max_alpha()
+    return client, host, history

@@ -1,0 +1,59 @@
+"""Moments accountant for the PPAT network — Eqs. (8)–(10), Alg. 2 ll. 18–20.
+
+Tracks α(l) for a range of moments l; each PATE query (one noisy vote batch)
+adds the per-query moment bound
+
+    α(l) += min{ 2λ²l(l+1),
+                 log((1−q)·((1−q)/(1−e^{2λ}q))^l + q·e^{2λl}) }        (Eq. 9)
+    q    = (2 + λ|n0−n1|) / (4·exp(λ|n0−n1|))                          (Eq. 10)
+
+and the privacy estimate is ε̂ = min_l (α(l) + log(1/δ)) / l (Eq. 8). The
+data-dependent log-term is only a valid bound when q < 1/(1+e^{2λ}) (PATE
+Thms. 2–3); outside that regime we fall back to the data-independent
+2λ²l(l+1) term, which the ``min`` does automatically once the log-term is
+guarded against producing NaN/negative values.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class MomentsAccountant:
+    def __init__(self, lam: float, delta: float, max_moment: int = 32):
+        self.lam = float(lam)
+        self.delta = float(delta)
+        self.ls = np.arange(1, max_moment + 1, dtype=np.float64)
+        self.alpha = np.zeros_like(self.ls)
+        self.queries = 0
+
+    def update(self, n0, n1) -> None:
+        """Account one PATE query (or a batch: n0/n1 arrays)."""
+        n0 = np.atleast_1d(np.asarray(n0, dtype=np.float64))
+        n1 = np.atleast_1d(np.asarray(n1, dtype=np.float64))
+        lam, ls = self.lam, self.ls
+        for a, b in zip(n0, n1):
+            gap = abs(a - b)
+            q = (2.0 + lam * gap) / (4.0 * np.exp(lam * gap))  # Eq. 10
+            data_indep = 2.0 * lam**2 * ls * (ls + 1.0)
+            denom = 1.0 - np.exp(2.0 * lam) * q
+            if q < 1.0 / (1.0 + np.exp(2.0 * lam)) and denom > 0:
+                with np.errstate(over="ignore"):
+                    term = (1.0 - q) * ((1.0 - q) / denom) ** ls + q * np.exp(
+                        2.0 * lam * ls
+                    )
+                data_dep = np.log(np.maximum(term, 1e-300))
+                bound = np.minimum(data_indep, np.maximum(data_dep, 0.0))
+            else:
+                bound = data_indep
+            self.alpha += bound
+            self.queries += 1
+
+    def epsilon(self) -> float:
+        """ε̂ = min_l (α(l) + log(1/δ)) / l — Eq. 8."""
+        return float(np.min((self.alpha + np.log(1.0 / self.delta)) / self.ls))
+
+    def best_moment(self) -> int:
+        return int(self.ls[np.argmin((self.alpha + np.log(1.0 / self.delta)) / self.ls)])
+
+    def max_alpha(self) -> float:
+        return float(np.max(self.alpha))

@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticTextDataset, ByteTokenizer, make_batches  # noqa: F401

@@ -1,0 +1,10 @@
+# Pallas TPU kernels for the framework's compute hot spots.
+#
+# Each kernel package has: <name>.py (pl.pallas_call + BlockSpec VMEM tiling),
+# ops.py (jit'd public wrapper, interpret-mode switch), ref.py (pure-jnp
+# oracle the tests assert against).
+#
+#   flash_attention — blocked causal/sliding-window GQA attention
+#   triple_score    — blocked pairwise TransE scoring (link-prediction eval)
+#   csls            — fused-normalization cosine-similarity matmul for CSLS
+#   ssd_scan        — Mamba2 SSD intra-chunk kernel

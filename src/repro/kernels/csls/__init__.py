@@ -1,0 +1,2 @@
+from repro.kernels.csls.ops import cosine_matrix, csls_matrix  # noqa: F401
+from repro.kernels.csls.ref import cosine_matrix_ref, csls_matrix_ref  # noqa: F401

@@ -1,0 +1,40 @@
+"""jit'd wrappers: padded cosine tile kernel + top-k CSLS assembly."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.csls.csls import cosine_matrix_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("block_a", "block_b", "interpret"))
+def cosine_matrix(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    block_a: int = 128,
+    block_b: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    n, m = a.shape[0], b.shape[0]
+    ba, bb = min(block_a, n), min(block_b, m)
+    pa, pb = (-n) % ba, (-m) % bb
+    if pa:
+        a = jnp.pad(a, ((0, pa), (0, 0)))
+    if pb:
+        b = jnp.pad(b, ((0, pb), (0, 0)))
+    out = cosine_matrix_fwd(a, b, block_a=ba, block_b=bb, interpret=interpret)
+    return out[:n, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def csls_matrix(a: jnp.ndarray, b: jnp.ndarray, *, k: int = 10, interpret: bool = True):
+    """CSLS(a_i, b_j) = 2·cos − r_A − r_B, cosine tiles via the Pallas kernel."""
+    sim = cosine_matrix(a, b, interpret=interpret)
+    kk = min(k, sim.shape[1])
+    kk2 = min(k, sim.shape[0])
+    r_a = jnp.mean(jax.lax.top_k(sim, kk)[0], axis=1)
+    r_b = jnp.mean(jax.lax.top_k(sim.T, kk2)[0], axis=1)
+    return 2 * sim - r_a[:, None] - r_b[None, :]

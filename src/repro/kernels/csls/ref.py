@@ -1,0 +1,19 @@
+"""Pure-jnp oracles for the CSLS kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_matrix_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    an = a / (jnp.linalg.norm(a, axis=-1, keepdims=True) + 1e-9)
+    bn = b / (jnp.linalg.norm(b, axis=-1, keepdims=True) + 1e-9)
+    return (an @ bn.T).astype(jnp.float32)
+
+
+def csls_matrix_ref(a: jnp.ndarray, b: jnp.ndarray, k: int = 10) -> jnp.ndarray:
+    sim = cosine_matrix_ref(a, b)
+    kk = min(k, sim.shape[1])
+    kk2 = min(k, sim.shape[0])
+    r_a = jnp.mean(jnp.sort(sim, axis=1)[:, -kk:], axis=1)
+    r_b = jnp.mean(jnp.sort(sim, axis=0)[-kk2:, :], axis=0)
+    return 2 * sim - r_a[:, None] - r_b[None, :]

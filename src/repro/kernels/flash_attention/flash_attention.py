@@ -1,0 +1,123 @@
+"""Blocked flash attention (TPU Pallas) — causal / sliding-window, GQA-aware.
+
+Tiling: grid (batch, q_head, q_block, k_block) with the k axis innermost;
+running max/denominator/accumulator live in VMEM scratch and the output block
+is written once on the final k step (the standard TPU flash-attention
+schedule). Block shapes are MXU-aligned (multiples of 128 on the seq dims,
+head_dim ≤ 128 padded by the wrapper).
+
+VMEM working set per step ≈ (Bq·Dh + 2·Bk·Dh + Bq·Bk + Bq·Dh) · 4B
+≈ (128·128·4 + 2·128·128 + 128·128)·4 ≈ 330 KB — comfortably inside the
+~16 MB/core VMEM budget, leaving room for double-buffered pipelining.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, block_q: int, block_k: int, causal: bool, window: int,
+    num_k_blocks: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (Bq, Dh)
+    k = k_ref[0, 0].astype(jnp.float32)  # (Bk, Dh)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (Bq, Bk)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    # rows with no valid key yet: m_new stays NEG_INF → force p to 0
+    p = jnp.where((m_new == NEG_INF)[:, None], 0.0, p)
+    alpha = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+    l_new = alpha * l_prev + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jnp.ndarray,  # (B, H, S, Dh)
+    k: jnp.ndarray,  # (B, KV, T, Dh)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, h, s, dh = q.shape
+    _, kv, t, _ = k.shape
+    g = h // kv
+    scale = 1.0 / math.sqrt(dh)
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    assert s % block_q == 0 and t % block_k == 0
+    nq, nk = s // block_q, t // block_k
+
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale,
+        block_q=block_q,
+        block_k=block_k,
+        causal=causal,
+        window=window,
+        num_k_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh), lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+            pl.BlockSpec((1, 1, block_k, dh), lambda b_, h_, q_, k_: (b_, h_ // g, k_, 0)),
+            pl.BlockSpec((1, 1, block_k, dh), lambda b_, h_, q_, k_: (b_, h_ // g, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh), lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,36 @@
+"""Public jit'd wrapper for the flash-attention kernel.
+
+``interpret`` defaults to True in this CPU container (the kernel body runs in
+Python for correctness validation); on real TPU pass interpret=False.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """q: (B, H, S, Dh); k/v: (B, KV, T, Dh) with H % KV == 0 → (B, H, S, Dh)."""
+    return flash_attention_fwd(
+        q, k, v,
+        causal=causal, window=window,
+        block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )

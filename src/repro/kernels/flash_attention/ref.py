@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for flash attention."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, H, S, Dh)
+    k: jnp.ndarray,  # (B, KV, T, Dh)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jnp.ndarray:
+    b, h, s, dh = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    kr = jnp.repeat(k, g, axis=1)
+    vr = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum(
+        "bhsd,bhtd->bhst", q.astype(jnp.float32), kr.astype(jnp.float32)
+    ) / math.sqrt(dh)
+    t = kr.shape[2]
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= (qp - kp) < window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", probs, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

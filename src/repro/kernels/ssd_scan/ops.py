@@ -1,0 +1,63 @@
+"""jit'd wrapper: Pallas intra-chunk kernel + lax.scan inter-chunk recurrence.
+
+Drop-in equivalent of ``repro.models.ssm.ssd`` (the pure-jnp path): same
+(B, S, H, P) interface, same outputs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_chunks_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk_kernel_apply(
+    x: jnp.ndarray,   # (B, S, H, P)
+    dt: jnp.ndarray,  # (B, S, H)
+    a: jnp.ndarray,   # (H,)
+    bm: jnp.ndarray,  # (B, S, G, N) — G must be 1 for the kernel path
+    cm: jnp.ndarray,  # (B, S, G, N)
+    *,
+    chunk: int = 256,
+    state: Optional[jnp.ndarray] = None,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, h, p = x.shape
+    g, n = bm.shape[2], bm.shape[3]
+    assert g == 1, "kernel path supports n_groups=1 (broadcast groups upstream)"
+    q = min(chunk, s)
+    assert s % q == 0
+    nc = s // q
+
+    xg = x.reshape(b, nc, q, h, p).transpose(0, 3, 1, 2, 4)  # (B,H,NC,Q,P)
+    dtg = dt.reshape(b, nc, q, h).transpose(0, 3, 1, 2)      # (B,H,NC,Q)
+    bg = bm.reshape(b, nc, q, n)
+    cg = cm.reshape(b, nc, q, n)
+
+    y_intra, chunk_states, decay_in = ssd_chunks_fwd(
+        xg, dtg, a.reshape(h, 1), bg, cg, interpret=interpret
+    )
+    # inter-chunk recurrence: S_c = D_c · S_{c-1} + chunk_state_c
+    total_decay = decay_in[..., -1]  # (B,H,NC) = exp(cum[-1]) per chunk
+
+    def rec(carry, inp):
+        cs, td = inp  # (B,H,P,N), (B,H)
+        prev = carry
+        new = prev * td[..., None, None] + cs
+        return new, prev  # emit the state ENTERING this chunk
+
+    s0 = state if state is not None else jnp.zeros((b, h, p, n), jnp.float32)
+    cs_seq = chunk_states.transpose(2, 0, 1, 3, 4)  # (NC,B,H,P,N)
+    td_seq = total_decay.transpose(2, 0, 1)          # (NC,B,H)
+    final_state, entering = jax.lax.scan(rec, s0, (cs_seq, td_seq))
+
+    # y_inter[s] = C_s · S_enter · exp(cum[s])
+    ent = entering.transpose(1, 2, 0, 3, 4)  # (B,H,NC,P,N)
+    y_inter = jnp.einsum("bcqn,bhcpn->bhcqp", cg, ent)
+    y = y_intra + y_inter * decay_in[..., None]
+    y = y.transpose(0, 2, 3, 1, 4).reshape(b, s, h, p)
+    return y, final_state

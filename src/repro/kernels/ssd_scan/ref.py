@@ -1,0 +1,17 @@
+"""Pure-jnp oracle: full SSD over a sequence (and single chunk)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd as _ssd_models, ssd_chunk as _ssd_chunk_models
+
+
+def ssd_chunk_ref(x, dt, a, bm, cm, state) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(B,Q,H,P) layout oracle — delegates to the canonical model impl."""
+    return _ssd_chunk_models(x, dt, a, bm, cm, state)
+
+
+def ssd_ref(x, dt, a, bm, cm, chunk, state=None):
+    return _ssd_models(x, dt, a, bm, cm, chunk, state)

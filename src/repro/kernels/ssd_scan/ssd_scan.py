@@ -1,0 +1,92 @@
+"""Mamba2 SSD intra-chunk kernel (TPU Pallas).
+
+The SSD chunked algorithm (arXiv:2405.21060) has two parts:
+  1. intra-chunk: a (Q × Q) decay-masked attention-like quadratic form plus
+     the chunk's contribution to the running state — MXU-heavy, this kernel;
+  2. inter-chunk: a tiny (H, P, N) state recurrence — a lax.scan in ops.py.
+
+Grid (batch, heads, chunks); per step the kernel holds x (Q, P), dt (Q,),
+B/C (Q, N) and the (Q, Q) decay matrix in VMEM. With Q=256, P=64, N=128 fp32:
+x 64 KB + B/C 256 KB + L/scores 512 KB ≈ 0.9 MB — fits VMEM with
+double-buffering.
+
+Outputs per chunk: y_intra (Q, P) and chunk_state (P, N); the wrapper adds
+the inter-chunk ``C·S_prev·decay_in`` term after the recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, decay_ref):
+    x = x_ref[0, 0, 0].astype(jnp.float32)   # (Q, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)  # (Q,)
+    a = a_ref[0, 0].astype(jnp.float32)       # () per-head decay rate (negative)
+    bm = b_ref[0, 0].astype(jnp.float32)      # (Q, N)
+    cm = c_ref[0, 0].astype(jnp.float32)      # (Q, N)
+    q = x.shape[0]
+
+    da = dt * a  # (Q,) log-decays
+    cum = jnp.cumsum(da)  # inclusive
+    # L[s,t] = exp(cum[s] − cum[t]) for t ≤ s  (decay accumulated t→s)
+    diff = cum[:, None] - cum[None, :]
+    si = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    l_mat = jnp.where(ti <= si, jnp.exp(diff), 0.0)
+
+    scores = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, Q) = C_s · B_t
+    w = scores * l_mat * dt[None, :]
+    y_ref[0, 0, 0] = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(y_ref.dtype)
+
+    # chunk state: Σ_t exp(cum[-1] − cum[t]) · dt_t · x_t ⊗ B_t   → (P, N)
+    decay_end = jnp.exp(cum[-1] - cum) * dt  # (Q,)
+    xw = x * decay_end[:, None]  # (Q, P)
+    state_ref[0, 0, 0] = jax.lax.dot_general(
+        xw, bm, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(state_ref.dtype)
+
+    # per-position inbound decay exp(cum[s]) and total chunk decay exp(cum[-1])
+    decay_ref[0, 0, 0] = jnp.exp(cum).astype(decay_ref.dtype)
+
+
+def ssd_chunks_fwd(
+    x: jnp.ndarray,   # (B, H, NC, Q, P)
+    dt: jnp.ndarray,  # (B, H, NC, Q)
+    a: jnp.ndarray,   # (H, 1)
+    bm: jnp.ndarray,  # (B, NC, Q, N) — groups pre-broadcast (G=1)
+    cm: jnp.ndarray,  # (B, NC, Q, N)
+    *,
+    interpret: bool = True,
+):
+    b, h, nc, q, p = x.shape
+    n = bm.shape[-1]
+    grid = (b, h, nc)
+    y, state, decay = pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1), lambda bi, hi, ci: (hi, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda bi, hi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda bi, hi, ci: (bi, ci, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, p, n), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda bi, hi, ci: (bi, hi, ci, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, nc, q, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, nc, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, nc, q), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, a, bm, cm)
+    return y, state, decay

@@ -1,0 +1,2 @@
+from repro.kernels.triple_score.ops import pairwise_scores  # noqa: F401
+from repro.kernels.triple_score.ref import pairwise_scores_ref  # noqa: F401

@@ -1,0 +1,37 @@
+"""jit'd wrapper: pads the entity axis to a block multiple and dispatches."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.triple_score.triple_score import pairwise_scores_fwd
+
+
+@functools.partial(
+    jax.jit, static_argnames=("ord_", "block_q", "block_e", "interpret")
+)
+def pairwise_scores(
+    q: jnp.ndarray,
+    ent: jnp.ndarray,
+    *,
+    ord_: int = 1,
+    block_q: int = 8,
+    block_e: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, d = q.shape
+    e = ent.shape[0]
+    be = min(block_e, e)
+    bq = min(block_q, b)
+    pad_e = (-e) % be
+    pad_b = (-b) % bq
+    if pad_e:
+        ent = jnp.pad(ent, ((0, pad_e), (0, 0)))
+    if pad_b:
+        q = jnp.pad(q, ((0, pad_b), (0, 0)))
+    out = pairwise_scores_fwd(
+        q, ent, ord_=ord_, block_q=bq, block_e=be, interpret=interpret
+    )
+    return out[:b, :e]

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for pairwise translational scores."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_scores_ref(q: jnp.ndarray, ent: jnp.ndarray, *, ord_: int = 1) -> jnp.ndarray:
+    """(B, d) × (E, d) → (B, E); score = −‖q_i − e_j‖_ord."""
+    diff = q[:, None, :].astype(jnp.float32) - ent[None, :, :].astype(jnp.float32)
+    if ord_ == 2:
+        return -jnp.sqrt(jnp.sum(jnp.square(diff), axis=-1) + 1e-12)
+    return -jnp.sum(jnp.abs(diff), axis=-1)

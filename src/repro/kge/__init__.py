@@ -1,0 +1,4 @@
+from repro.kge.models import KGEModel, init_kge, score_triples, MODEL_FAMILIES  # noqa: F401
+from repro.kge.data import KG, synthesize_universe, PAPER_KG_STATS  # noqa: F401
+from repro.kge.trainer import KGETrainer  # noqa: F401
+from repro.kge.eval import triple_classification_accuracy, link_prediction  # noqa: F401

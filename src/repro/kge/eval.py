@@ -1,0 +1,102 @@
+"""Evaluation: triple classification and (filtered) link prediction.
+
+Triple classification (§4.1.3): corrupt each valid/test triple 1:1; learn a
+global score threshold on the valid set; report accuracy on test.
+
+Link prediction: for each test triple rank the true tail (and head) against
+all entities, removing other true triples in Filter mode; report Mean Rank and
+Hit@1/3/10 — the metrics of Tab. 4 / Tab. 6.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kge.data import corrupt_triples
+from repro.kge.models import (
+    KGEModel,
+    score_all_heads,
+    score_all_tails,
+    score_triples,
+)
+
+
+def triple_classification_accuracy(
+    params, model: KGEModel, kg, *, seed: int = 0
+) -> float:
+    rng = np.random.default_rng(seed)
+    va, te = kg.valid, kg.test
+    va_neg = corrupt_triples(rng, va, kg.num_entities)
+    te_neg = corrupt_triples(rng, te, kg.num_entities)
+
+    def scores(t):
+        t = jnp.asarray(t)
+        return np.asarray(score_triples(params, model, t[:, 0], t[:, 1], t[:, 2]))
+
+    sv_pos, sv_neg = scores(va), scores(va_neg)
+    # threshold maximizing valid accuracy (scan candidate thresholds)
+    cand = np.unique(np.concatenate([sv_pos, sv_neg]))
+    if len(cand) > 512:
+        cand = cand[:: len(cand) // 512]
+    acc = [
+        ((sv_pos >= c).mean() + (sv_neg < c).mean()) / 2.0 for c in cand
+    ]
+    thr = cand[int(np.argmax(acc))]
+    st_pos, st_neg = scores(te), scores(te_neg)
+    return float(((st_pos >= thr).mean() + (st_neg < thr).mean()) / 2.0)
+
+
+def _filter_mask(all_triples: np.ndarray, num_entities: int):
+    """Dicts mapping (h, r) → {t} and (r, t) → {h} for Filter mode."""
+    hr_t: Dict[Tuple[int, int], set] = {}
+    rt_h: Dict[Tuple[int, int], set] = {}
+    for h, r, t in all_triples:
+        hr_t.setdefault((int(h), int(r)), set()).add(int(t))
+        rt_h.setdefault((int(r), int(t)), set()).add(int(h))
+    return hr_t, rt_h
+
+
+def link_prediction(
+    params,
+    model: KGEModel,
+    kg,
+    *,
+    filtered: bool = True,
+    max_test: int = 2000,
+    batch: int = 128,
+) -> Dict[str, float]:
+    test = kg.test[:max_test]
+    all_triples = np.concatenate([kg.train, kg.valid, kg.test])
+    hr_t, rt_h = _filter_mask(all_triples, kg.num_entities) if filtered else ({}, {})
+
+    ranks = []
+    for i in range(0, len(test), batch):
+        chunk = test[i : i + batch]
+        h = jnp.asarray(chunk[:, 0])
+        r = jnp.asarray(chunk[:, 1])
+        t = jnp.asarray(chunk[:, 2])
+        s_tail = np.asarray(score_all_tails(params, model, h, r))  # (B, E)
+        s_head = np.asarray(score_all_heads(params, model, r, t))
+        for j, (hh, rr, tt) in enumerate(chunk):
+            row = s_tail[j].copy()
+            if filtered:
+                for other_t in hr_t.get((int(hh), int(rr)), ()):
+                    if other_t != int(tt):
+                        row[other_t] = -np.inf
+            ranks.append(1 + int((row > row[int(tt)]).sum()))
+            row = s_head[j].copy()
+            if filtered:
+                for other_h in rt_h.get((int(rr), int(tt)), ()):
+                    if other_h != int(hh):
+                        row[other_h] = -np.inf
+            ranks.append(1 + int((row > row[int(hh)]).sum()))
+    ranks = np.array(ranks, dtype=np.float64)
+    return {
+        "mean_rank": float(ranks.mean()),
+        "hit@1": float((ranks <= 1).mean()),
+        "hit@3": float((ranks <= 3).mean()),
+        "hit@10": float((ranks <= 10).mean()),
+    }

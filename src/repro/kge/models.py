@@ -1,0 +1,171 @@
+"""Translation-family KGE models: TransE, TransH, TransR, TransD.
+
+Exactly the four base models the paper plugs into FKGE (§4.1.3), plus
+DistMult/ComplEx/RotatE as beyond-paper extras. A model is a (params, score)
+pair; FKGE only ever touches ``params["ent"]`` / ``params["rel"]`` — that is
+what makes it a meta-algorithm.
+
+Score convention: **higher is better** (we negate distances).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+MODEL_FAMILIES = ("transe", "transh", "transr", "transd", "distmult", "complex", "rotate")
+
+
+@dataclass(frozen=True)
+class KGEModel:
+    family: str
+    num_entities: int
+    num_relations: int
+    dim: int
+    margin: float = 4.0
+    norm_ord: int = 1  # L1 per OpenKE default for TransE-family
+
+
+def _uniform(key, shape, dim):
+    bound = 6.0 / math.sqrt(dim)
+    return jax.random.uniform(key, shape, jnp.float32, -bound, bound)
+
+
+def init_kge(key, m: KGEModel) -> Dict[str, jnp.ndarray]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    e, r, d = m.num_entities, m.num_relations, m.dim
+    p = {"ent": _uniform(k1, (e, d), d), "rel": _uniform(k2, (r, d), d)}
+    if m.family == "transh":
+        w = _uniform(k3, (r, d), d)
+        p["norm_vec"] = w / (jnp.linalg.norm(w, axis=-1, keepdims=True) + 1e-9)
+    elif m.family == "transr":
+        eye = jnp.eye(d, dtype=jnp.float32)
+        p["proj"] = jnp.tile(eye[None], (r, 1, 1)) + 0.01 * _uniform(k3, (r, d, d), d)
+    elif m.family == "transd":
+        p["ent_p"] = _uniform(k3, (e, d), d)
+        p["rel_p"] = _uniform(k4, (r, d), d)
+    elif m.family == "complex":
+        p["ent_im"] = _uniform(k3, (e, d), d)
+        p["rel_im"] = _uniform(k4, (r, d), d)
+    elif m.family == "rotate":
+        p["rel"] = jax.random.uniform(k2, (r, d // 2), jnp.float32, -math.pi, math.pi)
+    return p
+
+
+def _norm(x, ord_):  # noqa: A002
+    if ord_ == 1:
+        return jnp.sum(jnp.abs(x), axis=-1)
+    return jnp.sqrt(jnp.sum(jnp.square(x), axis=-1) + 1e-12)
+
+
+def score_triples(
+    params: Dict[str, jnp.ndarray],
+    m: KGEModel,
+    h: jnp.ndarray,
+    r: jnp.ndarray,
+    t: jnp.ndarray,
+    *,
+    h_emb=None,
+    t_emb=None,
+) -> jnp.ndarray:
+    """Score a batch of (h, r, t) index triples; higher = more plausible.
+
+    ``h_emb``/``t_emb`` optionally override the gathered entity embeddings —
+    used by the PPAT pipeline to score with refined/translated embeddings.
+    """
+    ent, rel = params["ent"], params["rel"]
+    he = ent[h] if h_emb is None else h_emb
+    te = ent[t] if t_emb is None else t_emb
+
+    if m.family == "transe":
+        re = rel[r]
+        return -_norm(he + re - te, m.norm_ord)
+    if m.family == "transh":
+        re, w = rel[r], params["norm_vec"][r]
+        w = w / (jnp.linalg.norm(w, axis=-1, keepdims=True) + 1e-9)
+        hp = he - jnp.sum(w * he, -1, keepdims=True) * w
+        tp = te - jnp.sum(w * te, -1, keepdims=True) * w
+        return -_norm(hp + re - tp, m.norm_ord)
+    if m.family == "transr":
+        re, mat = rel[r], params["proj"][r]  # (B,d), (B,d,d)
+        hp = jnp.einsum("bd,bde->be", he, mat)
+        tp = jnp.einsum("bd,bde->be", te, mat)
+        return -_norm(hp + re - tp, m.norm_ord)
+    if m.family == "transd":
+        re = rel[r]
+        hpv, tpv = params["ent_p"][h], params["ent_p"][t]
+        rpv = params["rel_p"][r]
+        hp = he + jnp.sum(hpv * he, -1, keepdims=True) * rpv
+        tp = te + jnp.sum(tpv * te, -1, keepdims=True) * rpv
+        return -_norm(hp + re - tp, m.norm_ord)
+    if m.family == "distmult":
+        return jnp.sum(he * rel[r] * te, axis=-1)
+    if m.family == "complex":
+        hre, him = he, params["ent_im"][h]
+        tre, tim = te, params["ent_im"][t]
+        rre, rim = rel[r], params["rel_im"][r]
+        return jnp.sum(
+            hre * rre * tre + him * rre * tim + hre * rim * tim - him * rim * tre,
+            axis=-1,
+        )
+    if m.family == "rotate":
+        d2 = he.shape[-1] // 2
+        hr, hi = he[..., :d2], he[..., d2:]
+        tr, ti = te[..., :d2], te[..., d2:]
+        ph = params["rel"][r]
+        cr, ci = jnp.cos(ph), jnp.sin(ph)
+        rr = hr * cr - hi * ci
+        ri = hr * ci + hi * cr
+        return -jnp.sum(
+            jnp.sqrt(jnp.square(rr - tr) + jnp.square(ri - ti) + 1e-12), axis=-1
+        )
+    raise ValueError(f"unknown family {m.family!r}")
+
+
+def margin_loss(pos_scores: jnp.ndarray, neg_scores: jnp.ndarray, margin: float):
+    """Margin ranking loss (paper's base objective via OpenKE defaults)."""
+    return jnp.mean(jax.nn.relu(margin - pos_scores + neg_scores))
+
+
+def normalize_entities(params: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """Project entity embeddings onto the unit ball (TransE constraint)."""
+    out = dict(params)
+    n = jnp.linalg.norm(params["ent"], axis=-1, keepdims=True)
+    out["ent"] = params["ent"] / jnp.maximum(n, 1.0)
+    return out
+
+
+def score_all_tails(params, m: KGEModel, h: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+    """Score (h, r, ·) against every entity → (B, E). Used by link prediction."""
+    e = m.num_entities
+    ent = params["ent"]
+
+    if m.family == "transe":
+        q = params["ent"][h] + params["rel"][r]  # (B,d)
+        return -_norm(q[:, None, :] - ent[None], m.norm_ord)
+    if m.family == "distmult":
+        q = params["ent"][h] * params["rel"][r]
+        return q @ ent.T
+    # generic fallback: score against every entity by index expansion
+    b = h.shape[0]
+    t_all = jnp.arange(e)
+    hh = jnp.repeat(h[:, None], e, axis=1).reshape(-1)
+    rr = jnp.repeat(r[:, None], e, axis=1).reshape(-1)
+    tt = jnp.tile(t_all[None], (b, 1)).reshape(-1)
+    return score_triples(params, m, hh, rr, tt).reshape(b, e)
+
+
+def score_all_heads(params, m: KGEModel, r: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    if m.family == "transe":
+        q = params["ent"][t] - params["rel"][r]
+        return -_norm(q[:, None, :] - params["ent"][None], m.norm_ord)
+    b = t.shape[0]
+    e = m.num_entities
+    h_all = jnp.arange(e)
+    hh = jnp.tile(h_all[None], (b, 1)).reshape(-1)
+    rr = jnp.repeat(r[:, None], e, axis=1).reshape(-1)
+    tt = jnp.repeat(t[:, None], e, axis=1).reshape(-1)
+    return score_triples(params, m, hh, rr, tt).reshape(b, e)

@@ -1,0 +1,158 @@
+"""Local KGE training — the "Train" step of Fig. 2 / Alg. 1 line 2.
+
+SGD on margin ranking loss with 1:1 negative sampling, batched and jitted;
+an epoch is one ``lax.scan`` over minibatches. Matches OpenKE defaults used
+by the paper (§4.1.1): lr=0.5 (SGD), batch 100, margin-based TransX.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kge.models import (
+    KGEModel,
+    init_kge,
+    margin_loss,
+    normalize_entities,
+    score_triples,
+)
+
+
+@functools.partial(jax.jit, static_argnames=("model",))
+def _epoch(params, model: KGEModel, pos, neg, lr):
+    """pos/neg: (num_batches, B, 3) int32."""
+
+    def step(p, batch):
+        bp, bn = batch
+
+        def loss_fn(pp):
+            sp = score_triples(pp, model, bp[:, 0], bp[:, 1], bp[:, 2])
+            sn = score_triples(pp, model, bn[:, 0], bn[:, 1], bn[:, 2])
+            return margin_loss(sp, sn, model.margin)
+
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        p = jax.tree.map(lambda x, g: x - lr * g, p, grads)
+        return p, loss
+
+    params, losses = jax.lax.scan(step, params, (pos, neg))
+    params = normalize_entities(params)
+    return params, jnp.mean(losses)
+
+
+class KGETrainer:
+    """Owns one KG's embedding training state (one 'process' of the paper)."""
+
+    def __init__(self, kg, family: str = "transe", dim: int = 100, *,
+                 lr: float = 0.5, batch_size: int = 100, margin: float = 4.0,
+                 seed: int = 0):
+        self.kg = kg
+        self.model = KGEModel(
+            family=family,
+            num_entities=kg.num_entities,
+            num_relations=kg.num_relations,
+            dim=dim,
+            margin=margin,
+        )
+        self.lr = lr
+        self.batch_size = batch_size
+        self.rng = np.random.default_rng(seed)
+        self.params = init_kge(jax.random.PRNGKey(seed), self.model)
+        self._virtual: Tuple[int, int] = (0, 0)  # extra (ent, rel) rows
+        self._extra_triples: np.ndarray | None = None
+
+    # ---- virtual entities/relations (core.aggregation) -----------------
+    def extend_tables(self, v_ent, v_rel, extra_triples: np.ndarray) -> None:
+        """Temporarily append DP-translated virtual rows + their triples."""
+        import dataclasses
+
+        assert self._virtual == (0, 0), "virtual extension already active"
+        self.params = dict(self.params)
+        self.params["ent"] = jnp.concatenate([self.params["ent"], v_ent])
+        self.params["rel"] = jnp.concatenate([self.params["rel"], v_rel])
+        if "ent_p" in self.params:  # transd per-entity projections
+            pad = jnp.zeros((len(v_ent), self.model.dim), jnp.float32)
+            self.params["ent_p"] = jnp.concatenate([self.params["ent_p"], pad])
+            padr = jnp.zeros((len(v_rel), self.model.dim), jnp.float32)
+            self.params["rel_p"] = jnp.concatenate([self.params["rel_p"], padr])
+        if "norm_vec" in self.params:
+            padr = jnp.ones((len(v_rel), self.model.dim), jnp.float32)
+            padr = padr / jnp.sqrt(jnp.float32(self.model.dim))
+            self.params["norm_vec"] = jnp.concatenate([self.params["norm_vec"], padr])
+        if "proj" in self.params:
+            eye = jnp.tile(jnp.eye(self.model.dim)[None], (len(v_rel), 1, 1))
+            self.params["proj"] = jnp.concatenate([self.params["proj"], eye])
+        self._virtual = (len(v_ent), len(v_rel))
+        self._extra_triples = np.asarray(extra_triples, np.int32)
+        self.model = dataclasses.replace(
+            self.model,
+            num_entities=self.model.num_entities + len(v_ent),
+            num_relations=self.model.num_relations + len(v_rel),
+        )
+
+    def strip_virtual(self) -> None:
+        """Remove virtual rows before responding to other hosts (§3.2.1)."""
+        import dataclasses
+
+        ne, nr = self._virtual
+        if ne == 0 and nr == 0:
+            return
+        self.params = dict(self.params)
+        for k in ("ent", "ent_p"):
+            if k in self.params:
+                self.params[k] = self.params[k][: len(self.params[k]) - ne]
+        for k in ("rel", "rel_p", "norm_vec", "proj"):
+            if k in self.params:
+                self.params[k] = self.params[k][: len(self.params[k]) - nr]
+        self.model = dataclasses.replace(
+            self.model,
+            num_entities=self.model.num_entities - ne,
+            num_relations=self.model.num_relations - nr,
+        )
+        self._virtual = (0, 0)
+        self._extra_triples = None
+
+    def train_epochs(self, epochs: int = 1) -> float:
+        from repro.kge.data import corrupt_triples
+
+        tr = self.kg.train
+        if self._extra_triples is not None and len(self._extra_triples):
+            tr = np.concatenate([tr, self._extra_triples])
+        b = min(self.batch_size, len(tr))
+        loss = 0.0
+        for _ in range(epochs):
+            order = self.rng.permutation(len(tr))
+            nb = len(tr) // b
+            pos = tr[order[: nb * b]].reshape(nb, b, 3)
+            neg = corrupt_triples(self.rng, pos.reshape(-1, 3), self.kg.num_entities)
+            neg = neg.reshape(nb, b, 3)
+            self.params, l = _epoch(
+                self.params, self.model, jnp.asarray(pos), jnp.asarray(neg),
+                jnp.float32(self.lr),
+            )
+            loss = float(l)
+        return loss
+
+    # ---- embedding table access (the FKGE surface) --------------------
+    def get_entity_embeddings(self, idx: np.ndarray) -> jnp.ndarray:
+        return self.params["ent"][jnp.asarray(idx)]
+
+    def get_relation_embeddings(self, idx: np.ndarray) -> jnp.ndarray:
+        return self.params["rel"][jnp.asarray(idx)]
+
+    def set_entity_embeddings(self, idx: np.ndarray, emb: jnp.ndarray):
+        self.params = dict(self.params)
+        self.params["ent"] = self.params["ent"].at[jnp.asarray(idx)].set(emb)
+
+    def set_relation_embeddings(self, idx: np.ndarray, emb: jnp.ndarray):
+        self.params = dict(self.params)
+        self.params["rel"] = self.params["rel"].at[jnp.asarray(idx)].set(emb)
+
+    def snapshot(self) -> Dict[str, jnp.ndarray]:
+        return {k: v for k, v in self.params.items()}
+
+    def restore(self, snap: Dict[str, jnp.ndarray]):
+        self.params = dict(snap)

@@ -1,0 +1,102 @@
+"""End-to-end LM training driver.
+
+Runs a real training loop on local devices (CPU here, TPU identically):
+builds the model from ``--arch`` (optionally the reduced variant), the
+synthetic data pipeline, AdamW + cosine schedule, periodic eval + checkpoints.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
+      --steps 200 --batch 8 --seq-len 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import TrainConfig, get_config, reduced as make_reduced
+from repro.data.pipeline import SyntheticTextDataset, make_batches
+from repro.train.step import init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced smoke variant (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ce-chunk", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dtype", default="float32")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = make_reduced(cfg)
+    cfg = cfg.replace(dtype=args.dtype)
+    tcfg = TrainConfig(
+        global_batch=args.batch,
+        seq_len=args.seq_len,
+        microbatches=args.microbatches,
+        ce_chunk=args.ce_chunk,
+        learning_rate=args.lr,
+        warmup_steps=max(1, args.steps // 20),
+        total_steps=args.steps,
+        seed=args.seed,
+    )
+    n_params_note = cfg.param_count()
+    print(f"arch={cfg.name} params≈{n_params_note/1e6:.1f}M "
+          f"(active {cfg.active_param_count()/1e6:.1f}M) dtype={cfg.dtype}")
+
+    state = init_train_state(jax.random.PRNGKey(args.seed), cfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    ds = SyntheticTextDataset(vocab_size=cfg.vocab_size, seed=args.seed)
+
+    def extras(b):
+        out = {}
+        if cfg.encoder_layers:
+            rng = np.random.default_rng(args.seed)
+            out["frames"] = jnp.asarray(
+                rng.normal(0, 1, (args.batch, cfg.encoder_seq, cfg.d_model)),
+                jnp.dtype(cfg.dtype),
+            )
+        if cfg.num_patches:
+            rng = np.random.default_rng(args.seed + 1)
+            out["patches"] = jnp.asarray(
+                rng.normal(0, 1, (args.batch, cfg.num_patches, cfg.d_model)),
+                jnp.dtype(cfg.dtype),
+            )
+        return out
+
+    t0 = time.time()
+    losses = []
+    for i, batch in enumerate(
+        make_batches(ds, batch=args.batch, seq_len=args.seq_len, steps=args.steps)
+    ):
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        b.update(extras(b))
+        state, metrics = step(state, b)
+        losses.append(float(metrics["loss"]))
+        if (i + 1) % args.log_every == 0:
+            rate = args.batch * args.seq_len * args.log_every / (time.time() - t0)
+            t0 = time.time()
+            print(f"step {i+1:5d} loss={losses[-1]:.4f} "
+                  f"lr={float(metrics['lr']):.2e} tok/s={rate:,.0f}")
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, state.params,
+                        metadata={"arch": cfg.name, "steps": args.steps})
+        print(f"saved {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,202 @@
+"""Workload construction for the dry-run and launchers.
+
+``make_workload(cfg, shape, mesh, multi_pod)`` returns the jittable step
+function, abstract input ShapeDtypeStructs (``input_specs`` — no allocation),
+and in/out shardings for every (architecture × input shape) pair.
+
+Shape semantics:
+  train_4k    → one optimizer step (grad-accumulated microbatches)
+  prefill_32k → full-sequence prefill populating a KV cache
+  decode_32k  → ONE new token against a seq_len KV cache
+  long_500k   → ONE new token against a 524288-token context; requires
+                sub-quadratic attention → SSM / hybrid / SWA archs only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPE_BY_NAME, InputShape, ModelConfig, TrainConfig
+from repro.models.model import init_cache, init_params
+from repro.sharding.specs import batch_pspec, cache_pspecs, param_pspecs, state_pspecs
+from repro.train.step import (
+    init_train_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+# long_500k is only valid for sub-quadratic attention (DESIGN.md §4):
+LONG_CONTEXT_ARCHS = {"mamba2-2.7b", "jamba-1.5-large-398b", "mixtral-8x22b"}
+
+
+def supported(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.name not in LONG_CONTEXT_ARCHS:
+        return False, "full quadratic attention at 524k context (see DESIGN.md §4)"
+    return True, ""
+
+
+def default_train_config(
+    cfg: ModelConfig, shape: InputShape, *, multi_pod: bool = False
+) -> TrainConfig:
+    # multi-pod: 8 microbatches so each microbatch's 32 sequences still
+    # divide the 32-way ('pod','data') batch sharding (needed by the
+    # shard_map MoE path).
+    return TrainConfig(
+        global_batch=shape.global_batch,
+        seq_len=shape.seq_len,
+        microbatches=8 if multi_pod else 16,
+        ce_chunk=1024,  # sequence positions per CE chunk (see train/loss.py)
+    )
+
+
+def _ns(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _abstract_state(cfg: ModelConfig, tcfg: Optional[TrainConfig] = None):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    mdt = jnp.dtype(tcfg.moment_dtype) if tcfg else jnp.float32
+    return jax.eval_shape(
+        lambda k: init_train_state(k, cfg, moment_dtype=mdt), key
+    )
+
+
+def _abstract_params(cfg: ModelConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: init_params(k, cfg), key)
+
+
+def _abstract_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, cache_len))
+
+
+def make_workload(
+    cfg: ModelConfig,
+    shape_name: str,
+    mesh: Mesh,
+    *,
+    multi_pod: bool = False,
+    tcfg: Optional[TrainConfig] = None,
+    layout: str = "tp",
+) -> Dict[str, Any]:
+    """→ {fn, args (abstract), in_shardings, out_shardings, kind}.
+
+    layout: "tp" (tensor/expert parallel — default production rules) or
+    "dp" (fully data-parallel, small-card training; §Perf iteration 4)."""
+    shape = INPUT_SHAPE_BY_NAME[shape_name]
+    ok, why = supported(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} × {shape_name} unsupported: {why}")
+    from repro.sharding import context as shard_ctx
+
+    shard_ctx.set_mesh(mesh)  # layers with manual collectives (MoE a2a) read it
+    bspec = batch_pspec(multi_pod, layout=layout)
+    dt = jnp.dtype(cfg.dtype)
+
+    if shape.kind == "train":
+        tcfg = tcfg or default_train_config(cfg, shape, multi_pod=multi_pod)
+        state = _abstract_state(cfg, tcfg)
+        b, s = shape.global_batch, shape.seq_len
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        batch_specs = {"tokens": bspec, "labels": bspec}
+        if cfg.encoder_layers:
+            batch["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), dt)
+            batch_specs["frames"] = P(bspec[0], None, None)
+        if cfg.num_patches:
+            batch["patches"] = jax.ShapeDtypeStruct((b, cfg.num_patches, cfg.d_model), dt)
+            batch_specs["patches"] = P(bspec[0], None, None)
+        sspec = state_pspecs(state, layout=layout)
+        fn = make_train_step(cfg, tcfg)
+        return {
+            "fn": fn,
+            "args": (state, batch),
+            "in_shardings": (_ns(mesh, sspec), _ns(mesh, batch_specs)),
+            "out_shardings": (_ns(mesh, sspec), None),
+            "kind": "train",
+        }
+
+    params = _abstract_params(cfg)
+    pspec = param_pspecs(params)
+
+    if shape.kind == "prefill":
+        b, s = shape.global_batch, shape.seq_len
+        # VLM: the cache also holds the visual-prefix positions
+        cache = _abstract_cache(cfg, b, s + cfg.num_patches)
+        cspec = cache_pspecs(cache, cfg, b, multi_pod=multi_pod)
+        tokens = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        base = make_prefill_step(cfg)
+        extra_args: Tuple = ()
+        extra_specs: Tuple = ()
+        if cfg.encoder_layers:
+            extra_args = (jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), dt),)
+            extra_specs = (P(bspec[0], None, None),)
+            fn = lambda p, t, c, f: base(p, t, c, frames=f)
+        elif cfg.num_patches:
+            extra_args = (jax.ShapeDtypeStruct((b, cfg.num_patches, cfg.d_model), dt),)
+            extra_specs = (P(bspec[0], None, None),)
+            fn = lambda p, t, c, pa: base(p, t, c, patches=pa)
+        else:
+            fn = lambda p, t, c: base(p, t, c)
+        return {
+            "fn": fn,
+            "args": (params, tokens, cache) + extra_args,
+            "in_shardings": (_ns(mesh, pspec), NamedSharding(mesh, bspec), _ns(mesh, cspec))
+            + tuple(NamedSharding(mesh, s) for s in extra_specs),
+            "out_shardings": (None, _ns(mesh, cspec)),
+            "kind": "prefill",
+        }
+
+    # decode: ONE token against a cache of shape.seq_len
+    b, t = shape.global_batch, shape.seq_len
+    cache = _abstract_cache(cfg, b, t)
+    cspec = cache_pspecs(cache, cfg, b, multi_pod=multi_pod)
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    base = make_decode_step(cfg)
+    fn = lambda p, tok, c, cp: base(p, tok, c, cp)
+    tok_spec = NamedSharding(mesh, bspec if b > 1 else P(None, None))
+    return {
+        "fn": fn,
+        "args": (params, token, cache, pos),
+        "in_shardings": (
+            _ns(mesh, pspec),
+            tok_spec,
+            _ns(mesh, cspec),
+            NamedSharding(mesh, P()),
+        ),
+        "out_shardings": (None, _ns(mesh, cspec)),
+        "kind": "decode",
+    }
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Public ShapeDtypeStruct stand-ins for every model input (no mesh)."""
+    shape = INPUT_SHAPE_BY_NAME[shape_name]
+    dt = jnp.dtype(cfg.dtype)
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    elif shape.kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    else:
+        out["token"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        out["cache_pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    if cfg.encoder_layers:
+        out["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), dt)
+    if cfg.num_patches and shape.kind != "decode":
+        out["patches"] = jax.ShapeDtypeStruct((b, cfg.num_patches, cfg.d_model), dt)
+    return out

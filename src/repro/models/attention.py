@@ -1,0 +1,288 @@
+"""Grouped-query attention with qk-norm, QKV-bias, RoPE, sliding window,
+cross-attention (enc-dec), and single-token decode against a KV cache.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    apply_linear,
+    apply_norm,
+    apply_rope,
+    dtype_of,
+    init_linear,
+    init_norm,
+)
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, *, cross: bool = False) -> dict:
+    d, dt = cfg.d_model, dtype_of(cfg)
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": init_linear(kq, d, cfg.q_dim, dt, bias=cfg.qkv_bias),
+        "wk": init_linear(kk, d, cfg.kv_dim, dt, bias=cfg.qkv_bias),
+        "wv": init_linear(kv, d, cfg.kv_dim, dt, bias=cfg.qkv_bias),
+        "wo": init_linear(ko, cfg.q_dim, d, dt, bias=cfg.qkv_bias),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = init_norm(cfg.head_dim, "rmsnorm", dt)
+        p["k_norm"] = init_norm(cfg.head_dim, "rmsnorm", dt)
+    return p
+
+
+def _split_heads(x: jnp.ndarray, n: int, dh: int) -> jnp.ndarray:
+    return x.reshape(*x.shape[:-1], n, dh)
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """q: (B,S,H,Dh), k: (B,T,KV,Dh) → scores (B,KV,G,S,T) fp32."""
+    b, s, h, dh = q.shape
+    g = h // n_kv
+    qg = q.reshape(b, s, n_kv, g, dh)
+    return jnp.einsum(
+        "bskgd,btkd->bkgst", qg, k, preferred_element_type=jnp.float32
+    )
+
+
+def _gqa_out(probs: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """probs: (B,KV,G,S,T), v: (B,T,KV,Dh) → (B,S,H*Dh)."""
+    b, kv, g, s, t = probs.shape
+    o = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return o.reshape(b, s, kv * g * v.shape[-1])
+
+
+# Above this sequence length the dense (S×T) score tensor is replaced by the
+# flash-style two-level scan below (identical math, O(block²) live memory).
+CHUNKED_ATTN_THRESHOLD = 8192
+
+
+def _chunked_gqa_attention(
+    q: jnp.ndarray,  # (B, S, H, Dh)
+    k: jnp.ndarray,  # (B, T, KV, Dh)
+    v: jnp.ndarray,
+    *,
+    causal: bool,
+    window: int,
+    scale: float,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+) -> jnp.ndarray:
+    """XLA flash attention: scan over q chunks; inner scan over k chunks with
+    running (max, denom, acc). Live memory per step is O(q_chunk·k_chunk) per
+    head — this is what lets prefill_32k lower within HBM."""
+    import math as _math
+
+    b, s, h, dh = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    # largest chunk ≤ requested that divides the sequence (VLM prefix shifts
+    # the length off the power-of-two grid, e.g. 32768 + 256 patches); short
+    # axes (e.g. a 1500-frame cross-attention memory) stay single-chunk.
+    def _pick(n, want):
+        if n <= want:
+            return n
+        for c in range(want, 0, -1):  # largest divisor of n that is ≤ want
+            if n % c == 0:
+                return c
+
+    qc = _pick(s, q_chunk)
+    kc = _pick(t, k_chunk)
+    assert qc * 8 >= min(s, q_chunk), (s, qc)
+    assert kc * 8 >= min(t, k_chunk), (t, kc)
+    nq, nk = s // qc, t // kc
+    qg = q.reshape(b, nq, qc, kv, g, dh).transpose(1, 0, 3, 4, 2, 5)  # (nq,B,KV,G,qc,Dh)
+    kg = k.reshape(b, nk, kc, kv, dh).transpose(1, 0, 3, 2, 4)  # (nk,B,KV,kc,Dh)
+    vg = v.reshape(b, nk, kc, kv, dh).transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_and_block):
+        qi, qblk = qi_and_block  # qblk (B,KV,G,qc,Dh)
+
+        def k_step(carry, ki_and_kv):
+            m_prev, l_prev, acc = carry
+            ki, kblk, vblk = ki_and_kv
+            sc = (
+                jnp.einsum(
+                    "bkgqd,bktd->bkgqt", qblk.astype(jnp.float32),
+                    kblk.astype(jnp.float32),
+                )
+                * scale
+            )
+            qpos = qi * qc + jnp.arange(qc)[:, None]
+            kpos = ki * kc + jnp.arange(kc)[None, :]
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= kpos <= qpos
+            if window > 0:
+                mask &= (qpos - kpos) < window
+            sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+            m_cur = jnp.max(sc, axis=-1)
+            m_new = jnp.maximum(m_prev, m_cur)
+            p = jnp.exp(sc - m_new[..., None])
+            p = jnp.where((m_new == NEG_INF)[..., None], 0.0, p)
+            alpha = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+            l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,bktd->bkgqd", p, vblk.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kv, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, qc, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            k_step, (m0, l0, a0), (jnp.arange(nk), kg, vg)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qg))
+    # outs: (nq, B, KV, G, qc, Dh) → (B, S, H*Dh)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, h * dh)
+    return out
+
+
+def attention(
+    params: dict,
+    cfg,
+    x: jnp.ndarray,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    kv_x: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    b, s, _ = x.shape
+    src = kv_x if kv_x is not None else x
+    t = src.shape[1]
+    q = _split_heads(apply_linear(params["wq"], x), cfg.num_heads, cfg.head_dim)
+    k = _split_heads(apply_linear(params["wk"], src), cfg.num_kv_heads, cfg.head_dim)
+    v = _split_heads(apply_linear(params["wv"], src), cfg.num_kv_heads, cfg.head_dim)
+    if "q_norm" in params:
+        q = apply_norm(params["q_norm"], q, cfg.norm_eps)
+        k = apply_norm(params["k_norm"], k, cfg.norm_eps)
+    if kv_x is None and cfg.rope_theta > 0:
+        if positions is None:
+            positions = jnp.arange(s)[None, :]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if max(s, t) > CHUNKED_ATTN_THRESHOLD:
+        ctx = _chunked_gqa_attention(
+            q, k, v,
+            causal=causal and kv_x is None,
+            window=cfg.sliding_window if kv_x is None else 0,
+            scale=1.0 / float(cfg.head_dim) ** 0.5,
+        ).astype(x.dtype)
+        return apply_linear(params["wo"], ctx)
+    scores = _gqa_scores(q, k, cfg.num_kv_heads) / jnp.sqrt(cfg.head_dim)
+    if causal and kv_x is None:
+        si = jnp.arange(s)[:, None]
+        ti = jnp.arange(t)[None, :]
+        mask = ti <= si
+        if cfg.sliding_window:
+            mask &= (si - ti) < cfg.sliding_window
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return apply_linear(params["wo"], _gqa_out(probs, v))
+
+
+def init_kv_cache(cfg, batch: int, cache_len: int, dtype) -> dict:
+    shape = (batch, cache_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def prefill_attention(
+    params: dict, cfg, x: jnp.ndarray, cache: dict, *, positions=None
+) -> Tuple[jnp.ndarray, dict]:
+    """Full attention that also writes K/V into the cache prefix."""
+    b, s, _ = x.shape
+    src = x
+    q = _split_heads(apply_linear(params["wq"], x), cfg.num_heads, cfg.head_dim)
+    k = _split_heads(apply_linear(params["wk"], src), cfg.num_kv_heads, cfg.head_dim)
+    v = _split_heads(apply_linear(params["wv"], src), cfg.num_kv_heads, cfg.head_dim)
+    if "q_norm" in params:
+        q = apply_norm(params["q_norm"], q, cfg.norm_eps)
+        k = apply_norm(params["k_norm"], k, cfg.norm_eps)
+    if cfg.rope_theta > 0:
+        if positions is None:
+            positions = jnp.arange(s)[None, :]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if s > CHUNKED_ATTN_THRESHOLD:
+        ctx = _chunked_gqa_attention(
+            q, k, v, causal=True, window=cfg.sliding_window,
+            scale=1.0 / float(cfg.head_dim) ** 0.5,
+        ).astype(x.dtype)
+        y = apply_linear(params["wo"], ctx)
+    else:
+        scores = _gqa_scores(q, k, cfg.num_kv_heads) / jnp.sqrt(cfg.head_dim)
+        si = jnp.arange(s)[:, None]
+        ti = jnp.arange(s)[None, :]
+        mask = ti <= si
+        if cfg.sliding_window:
+            mask &= (si - ti) < cfg.sliding_window
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        y = apply_linear(params["wo"], _gqa_out(probs, v))
+    new_cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), 0, axis=1
+        ),
+        "v": jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), 0, axis=1
+        ),
+    }
+    return y, new_cache
+
+
+def decode_attention(
+    params: dict,
+    cfg,
+    x: jnp.ndarray,
+    cache: dict,
+    cache_pos: jnp.ndarray,
+    *,
+    kv_memory: Optional[dict] = None,
+) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode: x (B,1,d); cache k/v (B,T,KV,Dh); cache_pos scalar.
+
+    ``kv_memory`` (cross-attention): precomputed encoder K/V — cache untouched.
+    """
+    b = x.shape[0]
+    q = _split_heads(apply_linear(params["wq"], x), cfg.num_heads, cfg.head_dim)
+    if kv_memory is not None:
+        k, v = kv_memory["k"], kv_memory["v"]
+        new_cache = cache
+        t = k.shape[1]
+        valid = jnp.ones((t,), dtype=bool)
+    else:
+        k1 = _split_heads(apply_linear(params["wk"], x), cfg.num_kv_heads, cfg.head_dim)
+        v1 = _split_heads(apply_linear(params["wv"], x), cfg.num_kv_heads, cfg.head_dim)
+        if "q_norm" in params:
+            q = apply_norm(params["q_norm"], q, cfg.norm_eps)
+            k1 = apply_norm(params["k_norm"], k1, cfg.norm_eps)
+        if cfg.rope_theta > 0:
+            pos = jnp.full((b, 1), cache_pos)
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k1 = apply_rope(k1, pos, cfg.rope_theta)
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k1.astype(cache["k"].dtype), cache_pos, axis=1
+        )
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v1.astype(cache["v"].dtype), cache_pos, axis=1
+        )
+        new_cache = {"k": k, "v": v}
+        t = k.shape[1]
+        ti = jnp.arange(t)
+        valid = ti <= cache_pos
+        if cfg.sliding_window:
+            valid &= (cache_pos - ti) < cfg.sliding_window
+    scores = _gqa_scores(q, k, cfg.num_kv_heads) / jnp.sqrt(cfg.head_dim)
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    y = apply_linear(params["wo"], _gqa_out(probs, v))
+    return y, new_cache

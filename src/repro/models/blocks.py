@@ -1,0 +1,162 @@
+"""Decoder/encoder blocks and the layer-kind layout machinery.
+
+Every layer of an architecture is described by a ``LayerKind`` (mixer × ffn).
+Architectures with repeating structure (all of the assigned ten) are laid out
+as ``repeats × period``: parameters are stacked over the repeat axis per
+period-position, and the forward pass is a ``lax.scan`` over repeats with the
+(short, heterogeneous) period unrolled inside. This keeps HLO size and compile
+time O(period), not O(num_layers) — essential for the 61–72-layer cards.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    dtype_of,
+    init_mlp,
+    init_norm,
+)
+
+
+@dataclass(frozen=True)
+class LayerKind:
+    mixer: str  # "attn" | "ssm"
+    ffn: str    # "dense" | "moe" | "none"
+    cross: bool = False  # enc-dec decoder layers carry a cross-attention
+
+
+def layer_kinds(cfg) -> List[LayerKind]:
+    kinds = []
+    for i in range(cfg.num_layers):
+        mixer = "attn" if cfg.is_attn_layer(i) else "ssm"
+        if cfg.is_moe_layer(i):
+            ffn = "moe"
+        elif cfg.d_ff:
+            ffn = "dense"
+        else:
+            ffn = "none"
+        kinds.append(LayerKind(mixer, ffn, cross=cfg.arch_type == "encdec"))
+    return kinds
+
+
+def layout(cfg) -> Tuple[int, int, List[LayerKind]]:
+    """→ (repeats, period, kinds-of-one-period)."""
+    kinds = layer_kinds(cfg)
+    n = len(kinds)
+    for period in range(1, n + 1):
+        if n % period:
+            continue
+        if all(kinds[i] == kinds[i % period] for i in range(n)):
+            return n // period, period, kinds[:period]
+    return 1, n, kinds
+
+
+# ------------------------------------------------------------------ init
+def init_layer(key, cfg, kind: LayerKind) -> dict:
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    keys = jax.random.split(key, 8)
+    p = {"norm_mixer": init_norm(d, cfg.norm, dt)}
+    if kind.mixer == "attn":
+        p["attn"] = attn.init_attention(keys[0], cfg)
+    else:
+        p["ssm"] = ssm_mod.init_ssm(keys[1], cfg)
+    if kind.cross:
+        p["norm_cross"] = init_norm(d, cfg.norm, dt)
+        p["cross_attn"] = attn.init_attention(keys[2], cfg, cross=True)
+    if kind.ffn != "none":
+        p["norm_ffn"] = init_norm(d, cfg.norm, dt)
+    if kind.ffn == "dense":
+        p["mlp"] = init_mlp(keys[3], d, cfg.d_ff, cfg.act, dt, bias=cfg.qkv_bias)
+    elif kind.ffn == "moe":
+        p["moe"] = moe_mod.init_moe(keys[4], cfg, d)
+    return p
+
+
+# ------------------------------------------------------------------ apply
+def apply_layer(
+    p: dict,
+    cfg,
+    kind: LayerKind,
+    h: jnp.ndarray,
+    *,
+    positions=None,
+    encoder_out: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence layer (train / prefill / encoder). → (h, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    x = apply_norm(p["norm_mixer"], h, cfg.norm_eps)
+    if kind.mixer == "attn":
+        y = attn.attention(p["attn"], cfg, x, positions=positions, causal=causal)
+    else:
+        y, _ = ssm_mod.ssm_block(p["ssm"], cfg, x)
+    h = h + y
+    if kind.cross and encoder_out is not None:
+        x = apply_norm(p["norm_cross"], h, cfg.norm_eps)
+        y = attn.attention(p["cross_attn"], cfg, x, kv_x=encoder_out, causal=False)
+        h = h + y
+    if kind.ffn == "dense":
+        x = apply_norm(p["norm_ffn"], h, cfg.norm_eps)
+        h = h + apply_mlp(p["mlp"], x, cfg.act)
+    elif kind.ffn == "moe":
+        x = apply_norm(p["norm_ffn"], h, cfg.norm_eps)
+        y, aux = moe_mod.apply_moe(p["moe"], x, cfg)
+        h = h + y
+    return h, aux
+
+
+def init_layer_cache(cfg, kind: LayerKind, batch: int, cache_len: int, dtype) -> dict:
+    c = {}
+    if kind.mixer == "attn":
+        c["kv"] = attn.init_kv_cache(cfg, batch, cache_len, dtype)
+    else:
+        c["ssm"] = ssm_mod.init_ssm_cache(cfg, batch, dtype)
+    if kind.cross:
+        shape = (batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim)
+        c["cross_kv"] = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    return c
+
+
+def decode_layer(
+    p: dict,
+    cfg,
+    kind: LayerKind,
+    h: jnp.ndarray,
+    cache: dict,
+    cache_pos,
+) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode through a layer. h: (B, 1, d)."""
+    new_cache = {}
+    x = apply_norm(p["norm_mixer"], h, cfg.norm_eps)
+    if kind.mixer == "attn":
+        y, new_cache["kv"] = attn.decode_attention(
+            p["attn"], cfg, x, cache["kv"], cache_pos
+        )
+    else:
+        y, new_cache["ssm"] = ssm_mod.ssm_decode_step(p["ssm"], cfg, x, cache["ssm"])
+    h = h + y
+    if kind.cross:
+        x = apply_norm(p["norm_cross"], h, cfg.norm_eps)
+        y, _ = attn.decode_attention(
+            p["cross_attn"], cfg, x, {}, cache_pos, kv_memory=cache["cross_kv"]
+        )
+        h = h + y
+        new_cache["cross_kv"] = cache["cross_kv"]
+    if kind.ffn == "dense":
+        x = apply_norm(p["norm_ffn"], h, cfg.norm_eps)
+        h = h + apply_mlp(p["mlp"], x, cfg.act)
+    elif kind.ffn == "moe":
+        x = apply_norm(p["norm_ffn"], h, cfg.norm_eps)
+        y, _ = moe_mod.apply_moe(p["moe"], x, cfg)
+        h = h + y
+    return h, new_cache

@@ -1,0 +1,122 @@
+"""Primitive layers: norms, linear, embedding, RoPE, MLP.
+
+Pure-functional convention used across the substrate:
+  ``init_<layer>(key, ...) -> params``  (nested dict of jnp arrays)
+  ``<layer>(params, x, ...) -> y``
+Params are stored in ``cfg.dtype`` (bf16 in production); norms and softmax
+accumulate in fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------- norms
+def init_norm(d: int, norm: str, dtype) -> dict:
+    p = {"scale": jnp.ones((d,), dtype=dtype)}
+    if norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype=dtype)
+    return p
+
+
+def apply_norm(p: dict, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- linear
+def init_linear(key, d_in: int, d_out: int, dtype, *, bias: bool = False) -> dict:
+    w = jax.random.normal(key, (d_in, d_out), dtype=jnp.float32)
+    w = (w / jnp.sqrt(d_in)).astype(dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def apply_linear(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------- embedding
+def init_embedding(key, vocab: int, d: int, dtype) -> dict:
+    tbl = jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02
+    return {"table": tbl.astype(dtype)}
+
+
+def apply_embedding(p: dict, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def unembed(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied unembedding: x @ table.T → logits (accumulated in fp32)."""
+    return jnp.einsum(
+        "...d,vd->...v", x, p["table"], preferred_element_type=jnp.float32
+    )
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponents)  # (head_dim//2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    if theta <= 0:
+        return x
+    freqs = rope_freqs(x.shape[-1], theta)  # (Dh/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10_000.0, dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)  # (S, d)
+
+
+# ---------------------------------------------------------------- MLP
+def init_mlp(key, d: int, d_ff: int, act: str, dtype, *, bias: bool = False) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "up": init_linear(k1, d, d_ff, dtype, bias=bias),
+        "down": init_linear(k2, d_ff, d, dtype, bias=bias),
+    }
+    if act == "silu":  # SwiGLU
+        p["gate"] = init_linear(k3, d, d_ff, dtype, bias=bias)
+    return p
+
+
+def apply_mlp(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    h = apply_linear(p["up"], x)
+    if act == "silu":
+        h = jax.nn.silu(apply_linear(p["gate"], x)) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(f"unknown act {act!r}")
+    return apply_linear(p["down"], h)

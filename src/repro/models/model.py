@@ -1,0 +1,278 @@
+"""Model builder: init / forward / prefill / decode for every arch family.
+
+Layers are stacked ``repeats × period`` (see blocks.layout) and executed with
+``lax.scan`` over the repeat axis; the heterogeneous period (e.g. Jamba's
+7 mamba + 1 attention) is unrolled inside the scan body. ``cfg.remat`` wraps
+the scan body in ``jax.checkpoint`` for training.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.layers import (
+    apply_embedding,
+    apply_linear,
+    apply_norm,
+    dtype_of,
+    init_embedding,
+    init_linear,
+    init_norm,
+    sinusoidal_positions,
+    unembed,
+)
+
+ENCODER_KIND = blocks.LayerKind("attn", "dense", cross=False)
+
+
+# ------------------------------------------------------------------ init
+def _init_layer_stacks(key, cfg, kinds, repeats):
+    stacks = []
+    for p, kind in enumerate(kinds):
+        keys = jax.random.split(jax.random.fold_in(key, p), repeats)
+        stacks.append(jax.vmap(lambda k, kd=kind: blocks.init_layer(k, cfg, kd))(keys))
+    return stacks
+
+
+def init_params(key, cfg) -> dict:
+    dt = dtype_of(cfg)
+    keys = jax.random.split(key, 8)
+    repeats, period, kinds = blocks.layout(cfg)
+    params = {
+        "embed": init_embedding(keys[0], cfg.padded_vocab, cfg.d_model, dt),
+        "layers": _init_layer_stacks(keys[1], cfg, kinds, repeats),
+        "final_norm": init_norm(cfg.d_model, cfg.norm, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_linear(keys[2], cfg.d_model, cfg.padded_vocab, dt)
+    if cfg.learned_pos_emb:
+        params["pos_emb"] = (
+            jax.random.normal(keys[3], (cfg.learned_pos_emb, cfg.d_model), jnp.float32)
+            * 0.02
+        ).astype(dt)
+    if cfg.encoder_layers:
+        ekeys = jax.random.split(keys[4], cfg.encoder_layers)
+        params["encoder"] = {
+            "layers": [
+                jax.vmap(lambda k: blocks.init_layer(k, cfg, ENCODER_KIND))(ekeys)
+            ],
+            "final_norm": init_norm(cfg.d_model, cfg.norm, dt),
+            "frame_proj": init_linear(keys[5], cfg.d_model, cfg.d_model, dt),
+        }
+    if cfg.num_patches:
+        params["patch_proj"] = init_linear(keys[6], cfg.d_model, cfg.d_model, dt)
+    return params
+
+
+def build_model(cfg):
+    """Convenience: returns (init_fn, forward_fn) closed over cfg."""
+    return (lambda key: init_params(key, cfg)), (
+        lambda params, tokens, **kw: forward(params, cfg, tokens, **kw)
+    )
+
+
+# ------------------------------------------------------------------ scan body
+def _run_layers(
+    params_stacks,
+    cfg,
+    kinds,
+    h,
+    *,
+    positions=None,
+    encoder_out=None,
+    causal=True,
+):
+    """scan over repeats, unrolled period inside. → (h, aux_sum)."""
+
+    def body(carry, xs):
+        hh, aux = carry
+        for p, kind in enumerate(kinds):
+            hh, a = blocks.apply_layer(
+                xs[p],
+                cfg,
+                kind,
+                hh,
+                positions=positions,
+                encoder_out=encoder_out,
+                causal=causal,
+            )
+            aux = aux + a
+        return (hh, aux), None
+
+    if cfg.remat:
+        policy = None
+        if cfg.remat_policy == "dots":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        body = jax.checkpoint(body, policy=policy)
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)), tuple(params_stacks))
+    return h, aux
+
+
+def _encode(params, cfg, frames):
+    """Whisper-style encoder over stubbed frame embeddings (B, Senc, d)."""
+    enc = params["encoder"]
+    h = apply_linear(enc["frame_proj"], frames)
+    h = h + sinusoidal_positions(frames.shape[1], cfg.d_model).astype(h.dtype)[None]
+    h, _ = _run_layers(enc["layers"], cfg, [ENCODER_KIND], h, causal=False)
+    return apply_norm(enc["final_norm"], h, cfg.norm_eps)
+
+
+def _embed_inputs(params, cfg, tokens, patches, positions):
+    h = apply_embedding(params["embed"], tokens)
+    if cfg.learned_pos_emb:
+        if positions is None:
+            positions = jnp.arange(tokens.shape[1])[None, :]
+        # clamp: serving shapes can exceed the card's learned-position table
+        positions = jnp.minimum(positions, cfg.learned_pos_emb - 1)
+        pe = jnp.take(params["pos_emb"], positions, axis=0)  # (B|1, S, d)
+        h = h + jnp.broadcast_to(pe, h.shape)
+    if cfg.num_patches and patches is not None:
+        vis = apply_linear(params["patch_proj"], patches.astype(h.dtype))
+        h = jnp.concatenate([vis, h], axis=1)
+    return h
+
+
+def _logits(params, cfg, h):
+    h = apply_norm(params["final_norm"], h, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return unembed(params["embed"], h)
+    return apply_linear(params["unembed"], h).astype(jnp.float32)
+
+
+def forward(
+    params: dict,
+    cfg,
+    tokens: jnp.ndarray,
+    *,
+    frames: Optional[jnp.ndarray] = None,
+    patches: Optional[jnp.ndarray] = None,
+    positions: Optional[jnp.ndarray] = None,
+    return_hidden: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full forward. tokens: (B, S) → (logits (B, S', V) fp32, moe_aux)."""
+    repeats, period, kinds = blocks.layout(cfg)
+    encoder_out = _encode(params, cfg, frames) if cfg.encoder_layers else None
+    h = _embed_inputs(params, cfg, tokens, patches, positions)
+    h, aux = _run_layers(
+        params["layers"], cfg, kinds, h, positions=positions, encoder_out=encoder_out
+    )
+    if return_hidden:
+        h = apply_norm(params["final_norm"], h, cfg.norm_eps)
+        return h, aux
+    return _logits(params, cfg, h), aux
+
+
+# ------------------------------------------------------------------ cache
+def init_cache(cfg, batch: int, cache_len: int, dtype=None) -> dict:
+    dtype = dtype or dtype_of(cfg)
+    repeats, period, kinds = blocks.layout(cfg)
+
+    def per_pos(kind):
+        one = blocks.init_layer_cache(cfg, kind, batch, cache_len, dtype)
+        return jax.tree.map(
+            lambda x: jnp.zeros((repeats,) + x.shape, x.dtype), one
+        )
+
+    return {"layers": [per_pos(kind) for kind in kinds]}
+
+
+def decode_step(
+    params: dict,
+    cfg,
+    token: jnp.ndarray,  # (B, 1) int32
+    cache: dict,
+    cache_pos: jnp.ndarray,  # scalar int32: next write position
+) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode against the cache. → (logits (B, 1, V), new cache)."""
+    repeats, period, kinds = blocks.layout(cfg)
+    positions = None
+    if cfg.learned_pos_emb:
+        positions = jnp.full((token.shape[0], 1), cache_pos)
+    h = _embed_inputs(params, cfg, token, None, positions)
+
+    def body(hh, xs):
+        new_slices = []
+        for p, kind in enumerate(kinds):
+            hh, nc = blocks.decode_layer(xs[0][p], cfg, kind, hh, xs[1][p], cache_pos)
+            new_slices.append(nc)
+        return hh, tuple(new_slices)
+
+    h, new_caches = jax.lax.scan(
+        body, h, (tuple(params["layers"]), tuple(cache["layers"]))
+    )
+    return _logits(params, cfg, h), {"layers": list(new_caches)}
+
+
+def prefill(
+    params: dict,
+    cfg,
+    tokens: jnp.ndarray,
+    cache: dict,
+    *,
+    frames: Optional[jnp.ndarray] = None,
+    patches: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, dict]:
+    """Prefill: full forward that populates the cache prefix.
+
+    Implemented as full attention plus cache writes; SSM layers write their
+    final scan state. Returns last-position logits and the filled cache.
+    """
+    repeats, period, kinds = blocks.layout(cfg)
+    encoder_out = _encode(params, cfg, frames) if cfg.encoder_layers else None
+    h = _embed_inputs(params, cfg, tokens, patches, None)
+
+    from repro.models import attention as attn_mod
+    from repro.models import ssm as ssm_mod
+    from repro.models.layers import apply_mlp
+
+    def body(hh, xs):
+        pstacks, cstacks = xs
+        new_slices = []
+        for p, kind in enumerate(kinds):
+            lp, lc = pstacks[p], cstacks[p]
+            nc = {}
+            x = apply_norm(lp["norm_mixer"], hh, cfg.norm_eps)
+            if kind.mixer == "attn":
+                y, nc["kv"] = attn_mod.prefill_attention(lp["attn"], cfg, x, lc["kv"])
+            else:
+                y, nc["ssm"] = ssm_mod.ssm_prefill(lp["ssm"], cfg, x, lc["ssm"])
+            hh = hh + y
+            if kind.cross and encoder_out is not None:
+                x = apply_norm(lp["norm_cross"], hh, cfg.norm_eps)
+                y = attn_mod.attention(
+                    lp["cross_attn"], cfg, x, kv_x=encoder_out, causal=False
+                )
+                hh = hh + y
+                # precompute encoder K/V once for all later decode steps
+                ck = attn_mod._split_heads(
+                    attn_mod.apply_linear(lp["cross_attn"]["wk"], encoder_out),
+                    cfg.num_kv_heads, cfg.head_dim,
+                )
+                cv = attn_mod._split_heads(
+                    attn_mod.apply_linear(lp["cross_attn"]["wv"], encoder_out),
+                    cfg.num_kv_heads, cfg.head_dim,
+                )
+                nc["cross_kv"] = {
+                    "k": ck.astype(lc["cross_kv"]["k"].dtype),
+                    "v": cv.astype(lc["cross_kv"]["v"].dtype),
+                }
+            if kind.ffn == "dense":
+                x = apply_norm(lp["norm_ffn"], hh, cfg.norm_eps)
+                hh = hh + apply_mlp(lp["mlp"], x, cfg.act)
+            elif kind.ffn == "moe":
+                from repro.models import moe as moe_mod
+
+                x = apply_norm(lp["norm_ffn"], hh, cfg.norm_eps)
+                y, _ = moe_mod.apply_moe(lp["moe"], x, cfg)
+                hh = hh + y
+            new_slices.append(nc)
+        return hh, tuple(new_slices)
+
+    h, new_caches = jax.lax.scan(
+        body, h, (tuple(params["layers"]), tuple(cache["layers"]))
+    )
+    logits = _logits(params, cfg, h[:, -1:, :])
+    return logits, {"layers": list(new_caches)}

@@ -1,0 +1,269 @@
+"""Mamba2 block — SSD (state-space duality) chunked scan, TPU-adapted.
+
+Per arXiv:2405.21060. The chunked algorithm splits the sequence into chunks of
+``Q`` tokens; within a chunk the recurrence is computed as a (masked, decayed)
+attention-like quadratic form that maps onto the MXU; across chunks a small
+(H, P, N) state is carried by ``lax.scan``. Decode is a single O(1) state
+update — this is why the ``long_500k`` shape is trivially sub-quadratic for
+SSM/hybrid architectures.
+
+Layout: heads H shard over the mesh 'model' axis, batch over 'data'.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dtype_of
+
+
+def init_ssm(key, cfg) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    h = s.num_heads(d)
+    g, n, w = s.n_groups, s.d_state, s.conv_width
+    conv_ch = di + 2 * g * n
+    dt = dtype_of(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    in_dim = 2 * di + 2 * g * n + h  # z, x, B, C, dt
+    dt_init = jnp.exp(
+        jax.random.uniform(k3, (h,), jnp.float32)
+        * (math.log(s.dt_max) - math.log(s.dt_min))
+        + math.log(s.dt_min)
+    )
+    return {
+        "in_proj": (jax.random.normal(k1, (d, in_dim), jnp.float32) / math.sqrt(d)).astype(dt),
+        "conv_w": (jax.random.normal(k2, (w, conv_ch), jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(dt_init)),  # softplus^-1(dt_init)
+        "norm_scale": jnp.ones((di,), dt),
+        "out_proj": (jax.random.normal(k4, (di, d), jnp.float32) / math.sqrt(di)).astype(dt),
+    }
+
+
+def _segsum_matrix(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (..., Q) log-decays → L (..., Q, Q) with L[s,t]=exp(Σ_{t<τ≤s} a_τ), lower-tri."""
+    q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)  # inclusive
+    diff = cum[..., :, None] - cum[..., None, :]  # (.., s, t) = Σ up to s minus up to t
+    si = jnp.arange(q)[:, None]
+    ti = jnp.arange(q)[None, :]
+    return jnp.where(ti <= si, jnp.exp(diff), 0.0)
+
+
+def ssd_chunk(
+    x: jnp.ndarray,  # (B, Q, H, P)
+    dt: jnp.ndarray,  # (B, Q, H) post-softplus
+    A: jnp.ndarray,  # (H,) negative
+    Bm: jnp.ndarray,  # (B, Q, G, N)
+    Cm: jnp.ndarray,  # (B, Q, G, N)
+    state: jnp.ndarray,  # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One chunk of the SSD scan → (y (B,Q,H,P), new_state)."""
+    b, q, h, p = x.shape
+    g = Bm.shape[2]
+    rep = h // g
+    a = dt * A[None, None, :]  # (B,Q,H) log-decay
+    a_t = a.transpose(0, 2, 1)  # (B,H,Q)
+    cum = jnp.cumsum(a_t, axis=-1)  # (B,H,Q) inclusive
+
+    # intra-chunk: scores[s,t] = C_s·B_t (shared across heads in a group)
+    scores = jnp.einsum("bsgn,btgn->bgst", Cm.astype(jnp.float32), Bm.astype(jnp.float32))
+    scores = jnp.repeat(scores, rep, axis=1)  # (B,H,Q,Q)
+    L = _segsum_matrix(a_t)  # (B,H,Q,Q)
+    w = scores * L * dt.transpose(0, 2, 1)[:, :, None, :]  # weight on x_t
+    y = jnp.einsum("bhst,bthp->bshp", w.astype(x.dtype), x)
+
+    # inter-chunk: contribution of incoming state
+    decay_out = jnp.exp(cum).transpose(0, 2, 1)  # (B,Q,H)
+    c_rep = jnp.repeat(Cm, rep, axis=2)  # (B,Q,H,N)
+    y_inter = jnp.einsum("bqhn,bhpn->bqhp", c_rep.astype(jnp.float32), state.astype(jnp.float32))
+    y = y + (y_inter * decay_out[..., None]).astype(x.dtype)
+
+    # new state
+    decay_to_end = jnp.exp(cum[..., -1:] - cum).transpose(0, 2, 1)  # (B,Q,H)
+    b_rep = jnp.repeat(Bm, rep, axis=2)  # (B,Q,H,N)
+    dx = x.astype(jnp.float32) * (dt * decay_to_end)[..., None]  # (B,Q,H,P)
+    chunk_state = jnp.einsum("bqhp,bqhn->bhpn", dx, b_rep.astype(jnp.float32))
+    total_decay = jnp.exp(cum[..., -1])  # (B,H)
+    new_state = state * total_decay[..., None, None] + chunk_state
+    return y, new_state
+
+
+def ssd(
+    x: jnp.ndarray,  # (B, S, H, P)
+    dt: jnp.ndarray,  # (B, S, H)
+    A: jnp.ndarray,  # (H,)
+    Bm: jnp.ndarray,  # (B, S, G, N)
+    Cm: jnp.ndarray,  # (B, S, G, N)
+    chunk: int,
+    state: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD over a full sequence (scan over chunks)."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    nc = s // q
+    if state is None:
+        state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(carry, inp):
+        xc, dtc, bc, cc = inp
+        y, new_state = ssd_chunk(xc, dtc, A, bc, cc, carry)
+        return new_state, y
+
+    xs = (
+        x.reshape(b, nc, q, h, p).transpose(1, 0, 2, 3, 4),
+        dt.reshape(b, nc, q, h).transpose(1, 0, 2, 3),
+        Bm.reshape(b, nc, q, Bm.shape[2], n).transpose(1, 0, 2, 3, 4),
+        Cm.reshape(b, nc, q, Cm.shape[2], n).transpose(1, 0, 2, 3, 4),
+    )
+    final_state, ys = jax.lax.scan(step, state, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y, final_state
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x: (B,S,C), w: (W,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):
+        out = out + pad[:, i : i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _split_proj(cfg, proj: jnp.ndarray):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    g, n = s.n_groups, s.d_state
+    h = s.num_heads(cfg.d_model)
+    z, xbc, dt = jnp.split(proj, [di, di + di + 2 * g * n], axis=-1)
+    return z, xbc, dt, di, g, n, h
+
+
+def ssm_block(
+    params: dict, cfg, u: jnp.ndarray, state: Optional[jnp.ndarray] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full Mamba2 block over a sequence. u: (B, S, d) → (y, final_ssd_state)."""
+    s_cfg = cfg.ssm
+    b, s, d = u.shape
+    proj = u @ params["in_proj"]
+    z, xbc, dtp, di, g, n, h = _split_proj(cfg, proj)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xh, bm, cm = jnp.split(xbc, [di, di + g * n], axis=-1)
+    p = s_cfg.head_dim
+    xh = xh.reshape(b, s, h, p)
+    bm = bm.reshape(b, s, g, n)
+    cm = cm.reshape(b, s, g, n)
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, final_state = ssd(xh, dt, A, bm, cm, s_cfg.chunk_size, state)
+    y = y + xh * params["D"][None, None, :, None]
+    y = y.reshape(b, s, di)
+    # gated RMSNorm (Mamba2 style): norm(y * silu(z))
+    yz = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    ms = jnp.mean(jnp.square(yz.astype(jnp.float32)), axis=-1, keepdims=True)
+    yz = (yz.astype(jnp.float32) * jax.lax.rsqrt(ms + cfg.norm_eps)).astype(u.dtype)
+    yz = yz * params["norm_scale"]
+    return yz @ params["out_proj"], final_state
+
+
+def ssm_prefill(params: dict, cfg, u: jnp.ndarray, cache: dict) -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence pass that also fills the decode cache (SSD state +
+    conv history tail). u: (B, S, d)."""
+    s_cfg = cfg.ssm
+    b, s, d = u.shape
+    proj = u @ params["in_proj"]
+    z, xbc_raw, dtp, di, g, n, h = _split_proj(cfg, proj)
+    w = s_cfg.conv_width
+    # conv history the decoder needs: the last (W-1) *pre-conv* xbc rows
+    tail = xbc_raw[:, -(w - 1):, :] if s >= w - 1 else jnp.concatenate(
+        [jnp.zeros((b, w - 1 - s, xbc_raw.shape[-1]), xbc_raw.dtype), xbc_raw], axis=1
+    )
+    xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    xh, bm, cm = jnp.split(xbc, [di, di + g * n], axis=-1)
+    p = s_cfg.head_dim
+    xh = xh.reshape(b, s, h, p)
+    bm = bm.reshape(b, s, g, n)
+    cm = cm.reshape(b, s, g, n)
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    q = s_cfg.chunk_size
+    if s % min(q, s):  # pad sequence to a chunk multiple for the scan
+        pad = min(q, s) - s % min(q, s)
+    else:
+        pad = 0
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    y, final_state = ssd(xh, dt, A, bm, cm, q, None)
+    y = y[:, :s] + xh[:, :s] * params["D"][None, None, :, None]
+    y = y.reshape(b, s, di)
+    yz = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    ms = jnp.mean(jnp.square(yz.astype(jnp.float32)), axis=-1, keepdims=True)
+    yz = (yz.astype(jnp.float32) * jax.lax.rsqrt(ms + cfg.norm_eps)).astype(u.dtype)
+    yz = yz * params["norm_scale"]
+    out = yz @ params["out_proj"]
+    new_cache = {"state": final_state, "conv": tail.astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+def init_ssm_cache(cfg, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    h = s.num_heads(d)
+    g, n = s.n_groups, s.d_state
+    conv_ch = di + 2 * g * n
+    return {
+        "state": jnp.zeros((batch, h, s.head_dim, n), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def ssm_decode_step(
+    params: dict, cfg, u: jnp.ndarray, cache: dict
+) -> Tuple[jnp.ndarray, dict]:
+    """Single-token decode. u: (B, 1, d)."""
+    s_cfg = cfg.ssm
+    b = u.shape[0]
+    proj = u[:, 0] @ params["in_proj"]  # (B, in_dim)
+    z, xbc, dtp, di, g, n, h = _split_proj(cfg, proj)
+    # conv with cached history
+    hist = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # (B, W, C)
+    w = params["conv_w"]
+    conv_out = jnp.sum(hist.astype(jnp.float32) * w.astype(jnp.float32), axis=1)
+    xbc_t = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32)).astype(u.dtype)
+    new_conv = hist[:, 1:]
+    xh, bm, cm = jnp.split(xbc_t, [di, di + g * n], axis=-1)
+    p = s_cfg.head_dim
+    xh = xh.reshape(b, h, p)
+    bm = bm.reshape(b, g, n)
+    cm = cm.reshape(b, g, n)
+    rep = h // g
+    bmr = jnp.repeat(bm, rep, axis=1)  # (B, H, N)
+    cmr = jnp.repeat(cm, rep, axis=1)
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + params["dt_bias"])  # (B, H)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A[None, :])  # (B, H)
+    upd = (dt[..., None] * xh.astype(jnp.float32))[..., None] * bmr[:, :, None, :].astype(jnp.float32)
+    state = cache["state"] * decay[..., None, None] + upd  # (B,H,P,N)
+    y = jnp.einsum("bhpn,bhn->bhp", state, cmr.astype(jnp.float32))
+    y = y + xh.astype(jnp.float32) * params["D"][None, :, None]
+    y = y.reshape(b, di)
+    yz = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(yz), axis=-1, keepdims=True)
+    yz = yz * jax.lax.rsqrt(ms + cfg.norm_eps)
+    yz = (yz * params["norm_scale"].astype(jnp.float32)).astype(u.dtype)
+    out = (yz @ params["out_proj"])[:, None, :]
+    return out, {"state": state, "conv": new_conv}

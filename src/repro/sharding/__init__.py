@@ -1,0 +1,6 @@
+from repro.sharding.specs import (  # noqa: F401
+    param_pspecs,
+    batch_pspec,
+    cache_pspecs,
+    state_pspecs,
+)

@@ -1,0 +1,88 @@
+"""Cross-entropy loss with optional sequence-chunked logits.
+
+``ce_chunk > 0`` never materialises the full (B, S, V) logits tensor: the
+final hidden states are scanned in sequence chunks and each chunk's logits are
+rematerialised in the backward pass (``jax.checkpoint``). For the assigned
+``train_4k`` shape (1M tokens × 152k vocab ≈ 300 TB of fp32 logits) this is
+the difference between impossible and cheap — it is one of the §Perf levers.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_linear, unembed
+from repro.models.model import forward
+
+
+def _ce_from_logits(logits: jnp.ndarray, labels: jnp.ndarray, mask: jnp.ndarray, z_loss: float):
+    """logits (N, V) fp32, labels (N,), mask (N,) → (sum_nll, sum_z)."""
+    m = mask.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    nll = jnp.sum((lse - picked) * m)
+    z = jnp.sum(jnp.square(lse) * m) * z_loss if z_loss else jnp.zeros(())
+    return nll, z
+
+
+def _project(params, cfg, h):
+    if cfg.tie_embeddings:
+        return unembed(params["embed"], h)
+    return apply_linear(params["unembed"], h).astype(jnp.float32)
+
+
+def lm_loss(
+    params: dict,
+    cfg,
+    tokens: jnp.ndarray,
+    labels: jnp.ndarray,
+    *,
+    frames: Optional[jnp.ndarray] = None,
+    patches: Optional[jnp.ndarray] = None,
+    ce_chunk: int = 0,
+    z_loss: float = 0.0,
+) -> Tuple[jnp.ndarray, dict]:
+    """Mean next-token CE (+ MoE aux + z-loss). labels==-1 positions masked."""
+    h, aux = forward(
+        params, cfg, tokens, frames=frames, patches=patches, return_hidden=True
+    )
+    if cfg.num_patches:  # VLM: loss only on the token positions
+        h = h[:, cfg.num_patches :, :]
+    b, s, d = h.shape
+    mask2 = labels >= 0
+    labels2 = jnp.maximum(labels, 0)
+    denom = jnp.maximum(1.0, jnp.sum(mask2.astype(jnp.float32)))
+
+    if ce_chunk and s % ce_chunk == 0 and s > ce_chunk:
+        # Chunk along the SEQUENCE axis only: the batch axis stays mesh-
+        # sharded through the scan (§Perf iteration 2 — a flat (b·s) chunking
+        # merges the sharded batch dim into the scan axis and forces GSPMD to
+        # re-gather activations every chunk).
+        nchunk = s // ce_chunk
+
+        @jax.checkpoint
+        def chunk_fn(carry, xs):
+            hc, lc, mc = xs  # (b, ce_chunk, d) / (b, ce_chunk)
+            logits = _project(params, cfg, hc.reshape(b * ce_chunk, d))
+            nll, z = _ce_from_logits(
+                logits, lc.reshape(-1), mc.reshape(-1), z_loss
+            )
+            return (carry[0] + nll, carry[1] + z), None
+
+        xs = (
+            h.reshape(b, nchunk, ce_chunk, d).swapaxes(0, 1),
+            labels2.reshape(b, nchunk, ce_chunk).swapaxes(0, 1),
+            mask2.reshape(b, nchunk, ce_chunk).swapaxes(0, 1),
+        )
+        (nll, z), _ = jax.lax.scan(chunk_fn, (jnp.zeros(()), jnp.zeros(())), xs)
+    else:
+        logits = _project(params, cfg, h.reshape(b * s, d))
+        nll, z = _ce_from_logits(
+            logits, labels2.reshape(-1), mask2.reshape(-1), z_loss
+        )
+
+    loss = nll / denom + z / denom + aux
+    metrics = {"nll": nll / denom, "aux": aux, "z": z / denom}
+    return loss, metrics

@@ -1,0 +1,79 @@
+"""Federation protocol: handshake, backtrack, broadcast, quiescence."""
+import numpy as np
+import pytest
+
+from repro.core.federation import FederationScheduler, NodeState
+from repro.core.ppat import PPATConfig
+from repro.kge.data import synthesize_universe
+
+
+@pytest.fixture(scope="module")
+def universe():
+    stats = [("A", 12, 90000, 300000), ("B", 10, 70000, 240000), ("C", 8, 60000, 200000)]
+    aligns = [("A", "B", 30000), ("B", "C", 20000), ("A", "C", 18000)]
+    return synthesize_universe(seed=1, scale=1 / 500, kg_stats=stats, alignments=aligns)
+
+
+@pytest.fixture(scope="module")
+def trained_fed(universe):
+    fed = FederationScheduler(
+        universe, dim=24, ppat_cfg=PPATConfig(steps=60, seed=0),
+        local_epochs=80, update_epochs=25, seed=0,
+    )
+    fed.initial_training()
+    fed.run(max_ticks=2)
+    return fed
+
+
+def test_initial_training_broadcasts(universe):
+    fed = FederationScheduler(
+        universe, dim=16, ppat_cfg=PPATConfig(steps=5), local_epochs=5, seed=0
+    )
+    fed.initial_training()
+    # every owner with alignments got handshake offers queued
+    assert all(len(fed.queue[n]) > 0 for n in universe)
+    assert all(fed.state[n] is NodeState.READY for n in universe)
+
+
+def test_best_score_never_decreases(trained_fed):
+    """Backtrack invariant: accepted federations only ever improve."""
+    best = {}
+    for ev in trained_fed.events:
+        if ev.kind == "init":
+            best[ev.host] = ev.score_after
+            continue
+        if ev.accepted:
+            assert ev.score_after > best[ev.host]
+            best[ev.host] = ev.score_after
+        else:
+            assert ev.score_after <= best[ev.host] + 1e-9
+    assert best == trained_fed.best_score
+
+
+def test_rejected_federation_restores_snapshot(universe):
+    fed = FederationScheduler(
+        universe, dim=16, ppat_cfg=PPATConfig(steps=5, seed=0),
+        local_epochs=30, update_epochs=2, seed=0,
+    )
+    fed.initial_training()
+    snap_before = {k: np.asarray(v["ent"]) for k, v in
+                   ((n, fed.best_snapshot[n]) for n in universe)}
+    ev = fed.federate_once("A", "B")
+    if not ev.accepted:
+        assert np.allclose(np.asarray(fed.trainers["A"].params["ent"]), snap_before["A"])
+
+
+def test_federation_improves_some_kg(trained_fed):
+    inits = {e.host: e.score_after for e in trained_fed.events if e.kind == "init"}
+    improved = [n for n, s in trained_fed.best_score.items() if s > inits[n] + 1e-9]
+    assert improved, "federation should improve at least one KG"
+
+
+def test_epsilon_recorded_per_handshake(trained_fed):
+    ppat_events = [e for e in trained_fed.events if e.kind == "ppat"]
+    assert ppat_events
+    assert all(np.isfinite(e.epsilon) and e.epsilon > 0 for e in ppat_events)
+
+
+def test_busy_state_cleared(trained_fed):
+    assert all(s is not NodeState.BUSY for s in trained_fed.state.values())

@@ -1,0 +1,122 @@
+"""Kernel sweeps: shapes × dtypes, assert_allclose against ref.py oracles.
+
+All Pallas kernels run in interpret mode (CPU container; TPU is the target).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.csls import (
+    cosine_matrix,
+    cosine_matrix_ref,
+    csls_matrix,
+    csls_matrix_ref,
+)
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.ssd_scan import ssd_chunk_kernel_apply
+from repro.kernels.triple_score import pairwise_scores, pairwise_scores_ref
+from repro.models.ssm import ssd
+
+
+# ------------------------------------------------------------ flash attn
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,kv,s,dh,causal,window",
+    [
+        (1, 2, 1, 128, 64, True, 0),
+        (2, 4, 2, 256, 64, True, 0),
+        (1, 4, 4, 128, 128, True, 0),   # MHA
+        (1, 2, 2, 256, 32, False, 0),   # bidirectional (encoder)
+        (1, 2, 1, 256, 64, True, 64),   # sliding window
+        (2, 8, 2, 128, 64, True, 0),    # GQA 4:1
+    ],
+)
+def test_flash_attention_matches_ref(b, h, kv, s, dh, causal, window, dtype):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, h, s, dh), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, kv, s, dh), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, kv, s, dh), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+# ---------------------------------------------------------- triple score
+@pytest.mark.parametrize("ord_", [1, 2])
+@pytest.mark.parametrize("b,e,d", [(8, 256, 64), (13, 300, 100), (32, 512, 128), (5, 97, 48)])
+def test_pairwise_scores_matches_ref(b, e, d, ord_):
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, d))
+    ent = jax.random.normal(jax.random.PRNGKey(1), (e, d))
+    out = pairwise_scores(q, ent, ord_=ord_)
+    ref = pairwise_scores_ref(q, ent, ord_=ord_)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-4, rtol=1e-4)
+
+
+@given(
+    b=st.integers(1, 24), e=st.integers(1, 300), d=st.sampled_from([16, 32, 100])
+)
+@settings(max_examples=12, deadline=None)
+def test_pairwise_scores_property_shapes(b, e, d):
+    q = jnp.ones((b, d))
+    ent = jnp.zeros((e, d))
+    out = pairwise_scores(q, ent, ord_=1)
+    assert out.shape == (b, e)
+    np.testing.assert_allclose(np.asarray(out), -float(d), atol=1e-5)
+
+
+# ------------------------------------------------------------------ csls
+@pytest.mark.parametrize("n,m,d", [(128, 128, 64), (200, 150, 32), (64, 257, 100)])
+def test_cosine_matrix_matches_ref(n, m, d):
+    a = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    b = jax.random.normal(jax.random.PRNGKey(1), (m, d))
+    np.testing.assert_allclose(
+        np.asarray(cosine_matrix(a, b)), np.asarray(cosine_matrix_ref(a, b)),
+        atol=1e-5, rtol=1e-5,
+    )
+
+
+def test_csls_matches_ref():
+    a = jax.random.normal(jax.random.PRNGKey(0), (120, 32))
+    b = jax.random.normal(jax.random.PRNGKey(1), (90, 32))
+    np.testing.assert_allclose(
+        np.asarray(csls_matrix(a, b)), np.asarray(csls_matrix_ref(a, b)),
+        atol=1e-5, rtol=1e-5,
+    )
+
+
+# ------------------------------------------------------------------- ssd
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 128, 4, 32, 16, 32),
+    (1, 64, 2, 64, 32, 64),
+    (2, 256, 8, 32, 64, 64),
+])
+def test_ssd_kernel_matches_model_ssd(b, s, h, p, n, chunk):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (b, s, h)))
+    a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (h,)) * 0.2)
+    bm = jax.random.normal(jax.random.PRNGKey(3), (b, s, 1, n)) * 0.3
+    cm = jax.random.normal(jax.random.PRNGKey(4), (b, s, 1, n)) * 0.3
+    yk, sk = ssd_chunk_kernel_apply(x, dt, a, bm, cm, chunk=chunk)
+    yr, sr = ssd(x, dt, a, bm, cm, chunk)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=2e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), atol=2e-3, rtol=1e-3)
+
+
+def test_ssd_kernel_respects_initial_state():
+    b, s, h, p, n = 1, 64, 2, 16, 8
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (b, s, h)))
+    a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (h,)) * 0.2)
+    bm = jax.random.normal(jax.random.PRNGKey(3), (b, s, 1, n)) * 0.3
+    cm = jax.random.normal(jax.random.PRNGKey(4), (b, s, 1, n)) * 0.3
+    s0 = jax.random.normal(jax.random.PRNGKey(5), (b, h, p, n))
+    yk, sk = ssd_chunk_kernel_apply(x, dt, a, bm, cm, chunk=32, state=s0)
+    yr, sr = ssd(x, dt, a, bm, cm, 32, s0)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=2e-3, rtol=1e-3)

@@ -1,0 +1,70 @@
+"""MoE dispatch invariants (hypothesis property tests)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced
+from repro.models.moe import _dispatch_positions, apply_moe_gather, capacity, init_moe
+
+
+@given(
+    n=st.integers(1, 200),
+    buckets=st.integers(1, 8),
+    cap=st.integers(1, 64),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=40, deadline=None)
+def test_dispatch_positions_invariants(n, buckets, cap, seed):
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(-1, buckets, n))  # -1 = invalid
+    keep, dest = _dispatch_positions(ids, buckets, cap)
+    keep = np.asarray(keep)
+    dest = np.asarray(dest)
+    # kept rows land in their own bucket's slot range, each slot used once
+    assert (dest[keep] < buckets * cap).all()
+    assert (dest[~keep] == buckets * cap).all()
+    assert len(np.unique(dest[keep])) == keep.sum()  # no slot collisions
+    for b in range(buckets):
+        in_b = keep & (np.asarray(ids) == b)
+        assert in_b.sum() <= cap  # capacity respected
+        slots = dest[in_b] - b * cap
+        assert ((slots >= 0) & (slots < cap)).all()
+    # invalid ids are never kept
+    assert not keep[np.asarray(ids) < 0].any()
+
+
+def test_capacity_formula_monotone():
+    cfg = reduced(get_config("mixtral-8x22b"))
+    caps = [capacity(t, cfg) for t in (64, 128, 256, 1024)]
+    assert caps == sorted(caps)
+    assert all(c % 8 == 0 for c in caps)
+
+
+@given(seed=st.integers(0, 20))
+@settings(max_examples=10, deadline=None)
+def test_moe_output_zero_for_zero_weights(seed):
+    """Zero expert weights → zero output (routing can't leak inputs)."""
+    cfg = reduced(get_config("mixtral-8x22b")).replace(dtype="float32")
+    p = init_moe(jax.random.PRNGKey(0), cfg, cfg.d_model)
+    p = {k: (jnp.zeros_like(v) if k.startswith("w_") else v) for k, v in p.items()}
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 8, cfg.d_model))
+    y, _ = apply_moe_gather(p, x, cfg)
+    assert float(jnp.abs(y).max()) == 0.0
+
+
+def test_moe_permutation_equivariance():
+    """Permuting tokens permutes outputs (capacity wide enough for no drops)."""
+    cfg = reduced(get_config("mixtral-8x22b")).replace(dtype="float32")
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    p = init_moe(jax.random.PRNGKey(0), cfg, cfg.d_model)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, cfg.d_model))
+    y, _ = apply_moe_gather(p, x, cfg)
+    perm = np.random.default_rng(0).permutation(16)
+    y_perm, _ = apply_moe_gather(p, x[:, perm], cfg)
+    np.testing.assert_allclose(
+        np.asarray(y[:, perm]), np.asarray(y_perm), atol=1e-5
+    )

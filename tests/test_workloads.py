@@ -1,0 +1,66 @@
+"""Workload construction invariants (pure — no mesh/devices needed)."""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config
+from repro.launch.workloads import LONG_CONTEXT_ARCHS, input_specs, supported
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("shape", [s.name for s in INPUT_SHAPES])
+def test_input_specs_cover_every_pair(arch, shape):
+    cfg = get_config(arch)
+    sh = next(s for s in INPUT_SHAPES if s.name == shape)
+    ok, why = supported(cfg, sh)
+    if not ok:
+        assert shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS
+        assert why
+        return
+    specs = input_specs(cfg, shape)
+    if sh.kind == "train":
+        assert specs["tokens"].shape == (sh.global_batch, sh.seq_len)
+        assert specs["labels"].dtype == jnp.int32
+    elif sh.kind == "prefill":
+        assert specs["tokens"].shape == (sh.global_batch, sh.seq_len)
+    else:
+        assert specs["token"].shape == (sh.global_batch, 1)
+        assert specs["cache_pos"].shape == ()
+    if cfg.encoder_layers:
+        assert specs["frames"].shape == (sh.global_batch, cfg.encoder_seq, cfg.d_model)
+    if cfg.num_patches and sh.kind != "decode":
+        assert specs["patches"].shape == (sh.global_batch, cfg.num_patches, cfg.d_model)
+
+
+def test_supported_matrix_counts():
+    """40 pairs total: 33 supported + 7 documented long-context skips."""
+    total = ok = 0
+    for arch in ARCHS.values():
+        for sh in INPUT_SHAPES:
+            total += 1
+            ok += supported(arch, sh)[0]
+    assert total == 40
+    assert ok == 33
+    assert LONG_CONTEXT_ARCHS == {"mamba2-2.7b", "jamba-1.5-large-398b", "mixtral-8x22b"}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_counts_match_cards(arch):
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    expected = {
+        "qwen3-0.6b": (0.4e9, 1.0e9),
+        "whisper-medium": (0.5e9, 0.85e9),  # 769M card (enc+dec)
+        "mamba2-2.7b": (2.2e9, 3.2e9),
+        "jamba-1.5-large-398b": (300e9, 480e9),
+        "deepseek-coder-33b": (30e9, 37e9),
+        "qwen2.5-3b": (2.6e9, 4e9),
+        "internvl2-26b": (17e9, 26e9),   # LM backbone only (vision stubbed)
+        "starcoder2-15b": (13e9, 17e9),
+        "kimi-k2-1t-a32b": (0.9e12, 1.15e12),
+        "mixtral-8x22b": (130e9, 150e9),
+    }[arch]
+    assert expected[0] <= n <= expected[1], f"{arch}: {n/1e9:.1f}B params"
+    a = cfg.active_param_count()
+    assert a <= n
+    if arch == "kimi-k2-1t-a32b":
+        assert 25e9 <= a <= 40e9  # "a32b"
