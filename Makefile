@@ -1,0 +1,19 @@
+PY := PYTHONPATH=src python
+
+.PHONY: tier1 test bench-eval bench
+
+# CI gate: the full suite, then the eval-engine parity tests explicitly
+# (they are the acceptance bar for the streaming fused-rank engine).
+tier1:
+	$(PY) -m pytest -x -q
+	$(PY) -m pytest -q tests/test_eval_engine.py -k "parity"
+
+test:
+	$(PY) -m pytest -q
+
+# old-path vs fused-rank engine µs/query at E ∈ {10k, 100k}; appends CSV rows
+bench-eval:
+	PYTHONPATH=src:. python benchmarks/bench_eval_engine.py --csv benchmarks/eval_engine.csv
+
+bench:
+	PYTHONPATH=src:. python benchmarks/run.py

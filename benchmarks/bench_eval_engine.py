@@ -1,0 +1,100 @@
+"""Streaming fused-rank eval engine vs the seed (B, E)-materializing path.
+
+Emits ``eval_engine.{old|new}.E{N}`` rows with µs/query (one query = one test
+triple, ranked tail- AND head-side) at E ∈ {10k, 100k}, plus a speedup row.
+The acceptance bar is ≥ 5× at E = 100k on the CI backend. ``--csv <path>``
+additionally records the rows to a CSV file.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kge.eval import link_prediction
+from repro.kge.models import KGEModel, init_kge
+
+
+@dataclass
+class _FakeKG:
+    """Minimal KG shim: random triples over a large entity table (the eval
+    path only reads splits + num_entities)."""
+
+    num_entities: int
+    num_relations: int
+    train: np.ndarray
+    valid: np.ndarray
+    test: np.ndarray
+
+
+def _make(e: int, *, n_queries: int, dim: int, seed: int = 0) -> tuple:
+    rng = np.random.default_rng(seed)
+
+    def tri(n):
+        return np.stack(
+            [rng.integers(0, e, n), rng.integers(0, 8, n), rng.integers(0, e, n)],
+            axis=1,
+        ).astype(np.int64)
+
+    kg = _FakeKG(e, 8, tri(4 * n_queries), tri(n_queries), tri(n_queries))
+    m = KGEModel("transe", num_entities=e, num_relations=8, dim=dim)
+    params = init_kge(jax.random.PRNGKey(seed), m)
+    return params, m, kg
+
+
+def _time_path(fn, *, repeats: int = 1) -> tuple:
+    fn()  # warm-up: compile + trace outside the timed region
+    t0 = time.time()
+    out = None
+    for _ in range(repeats):
+        out = fn()
+    return out, (time.time() - t0) / repeats
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv", default=None, help="also append rows to this file")
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--queries", type=int, default=24)
+    ap.add_argument("--sizes", type=int, nargs="*", default=[10_000, 100_000])
+    args = ap.parse_args(argv)
+
+    rows = []
+    for e in args.sizes:
+        # the old path ships (B, E) to host and broadcasts (B, E, d) on
+        # device — keep its batch small enough to fit CI memory
+        batch = 16 if e >= 100_000 else 32
+        params, m, kg = _make(e, n_queries=args.queries, dim=args.dim)
+        kw = dict(filtered=True, max_test=args.queries, batch=batch)
+
+        old, dt_old = _time_path(
+            lambda: link_prediction(params, m, kg, engine="reference", **kw)
+        )
+        new, dt_new = _time_path(
+            lambda: link_prediction(params, m, kg, engine="fused", **kw)
+        )
+        assert old == new, (old, new)  # parity recorded by the same run
+
+        us_old = dt_old * 1e6 / args.queries
+        us_new = dt_new * 1e6 / args.queries
+        speedup = us_old / us_new
+        rows.append((f"eval_engine.old.E{e}", us_old, f"mr={old['mean_rank']:.0f}"))
+        rows.append((f"eval_engine.new.E{e}", us_new, f"mr={new['mean_rank']:.0f}"))
+        rows.append(
+            (f"eval_engine.speedup.E{e}", us_new, f"speedup={speedup:.1f}x")
+        )
+
+    for name, us, derived in rows:
+        emit(name, us, derived)
+    if args.csv:
+        with open(args.csv, "a") as f:
+            for name, us, derived in rows:
+                f.write(f"{name},{us:.1f},{derived}\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,7 @@ import traceback
 from benchmarks import (
     bench_aggregation,
     bench_alignment_scale,
+    bench_eval_engine,
     bench_kernels,
     bench_link_prediction,
     bench_noise_ablation,
@@ -28,6 +29,7 @@ SUITES = [
     ("time_cost", bench_time_cost.main),         # Fig. 7
     ("triple_classification", bench_triple_classification.main),  # Fig. 4/5
     ("link_prediction", bench_link_prediction.main),              # Tab. 4
+    ("eval_engine", lambda: bench_eval_engine.main([])),          # fused ranks
     ("noise_ablation", bench_noise_ablation.main),                # Tab. 5
     ("alignment_scale", bench_alignment_scale.main),              # Tab. 6
     ("aggregation", bench_aggregation.main),                      # Tab. 7

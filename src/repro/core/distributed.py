@@ -29,13 +29,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.pate import pate_vote, teacher_votes
 from repro.core.ppat import PPATConfig, _disc_prob, _init_disc, _sgd_momentum
+from repro.sharding.context import auto_axis_types_kw, shard_map_compat
 
 
 def make_party_mesh(n_parties: int = 2) -> Mesh:
     devs = jax.devices()[:n_parties]
     return jax.make_mesh(
-        (n_parties,), ("party",), devices=devs,
-        axis_types=(jax.sharding.AxisType.Auto,),
+        (n_parties,), ("party",), devices=devs, **auto_axis_types_kw(1)
     )
 
 
@@ -166,12 +166,12 @@ def ppat_exchange_step(mesh: Mesh, cfg: PPATConfig):
             }
             return new_state, metrics, (n0, n1)
 
-        fn = jax.shard_map(
+        fn = shard_map_compat(
             spmd,
             mesh=mesh,
             in_specs=(P(), P("party"), P("party"), P("party")),
             out_specs=(P(), P("party"), P("party")),
-            check_vma=False,
+            check=False,
         )
         return fn(state, xb, yb, key)
 

@@ -70,12 +70,19 @@ class FederationScheduler:
         update_epochs: int = 25,
         score_fn: Optional[Callable] = None,
         score_split: str = "valid",
+        score_metric: str = "accuracy",
+        score_max_test: int = 200,
         seed: int = 0,
         margin: float = 2.0,
     ):
         # score_split="test" reproduces Alg. 1 verbatim (the paper backtracks
         # on g_j.test); "valid" (default) is the leakage-free variant.
+        # score_metric="hit10" backtracks on filtered Hit@10 instead of
+        # classification accuracy, ranked by the streaming fused-rank engine
+        # (candidate ranking never materializes (B, E) host-side).
         self.score_split = score_split
+        self.score_metric = score_metric
+        self.score_max_test = score_max_test
         self.kgs = kgs
         self.registry = registry or AlignmentRegistry.from_kgs(kgs)
         families = families or {n: "transe" for n in kgs}
@@ -89,7 +96,10 @@ class FederationScheduler:
         self.use_virtual = use_virtual
         self.local_epochs = local_epochs
         self.update_epochs = update_epochs
-        self.score_fn = score_fn or self._valid_accuracy
+        default_score = (
+            self._valid_hit10 if score_metric == "hit10" else self._valid_accuracy
+        )
+        self.score_fn = score_fn or default_score
         self.state: Dict[str, NodeState] = {n: NodeState.READY for n in kgs}
         self.queue: Dict[str, deque] = {n: deque() for n in kgs}
         self.best_score: Dict[str, float] = {}
@@ -105,6 +115,7 @@ class FederationScheduler:
         kg = self.kgs[name]
         rng = np.random.default_rng(0)  # fixed negatives → comparable scores
         from repro.kge.data import corrupt_triples
+        from repro.kge.eval import best_threshold_accuracy
         from repro.kge.models import score_triples
 
         va = kg.test if self.score_split == "test" else kg.valid
@@ -117,11 +128,21 @@ class FederationScheduler:
             )
 
         sp, sn = s(va), s(va_neg)
-        cand = np.unique(np.concatenate([sp, sn]))
-        if len(cand) > 256:
-            cand = cand[:: len(cand) // 256]
-        acc = [((sp >= c).mean() + (sn < c).mean()) / 2.0 for c in cand]
-        return float(np.max(acc))
+        _, acc = best_threshold_accuracy(sp, sn, max_candidates=256)
+        return acc
+
+    def _valid_hit10(self, name: str) -> float:
+        """Backtrack score = filtered Hit@10 on the score split, ranked by the
+        streaming fused-rank engine."""
+        from repro.kge.eval import link_prediction
+
+        tr = self.trainers[name]
+        split = "test" if self.score_split == "test" else "valid"
+        lp = link_prediction(
+            tr.params, tr.model, self.kgs[name],
+            split=split, max_test=self.score_max_test,
+        )
+        return lp["hit@10"]
 
     # ------------------------------------------------------ initial train
     def initial_training(self, epochs: Optional[int] = None) -> Dict[str, float]:

@@ -1,10 +1,14 @@
 # Pallas TPU kernels for the framework's compute hot spots.
 #
 # Each kernel package has: <name>.py (pl.pallas_call + BlockSpec VMEM tiling),
-# ops.py (jit'd public wrapper, interpret-mode switch), ref.py (pure-jnp
-# oracle the tests assert against).
+# ops.py (jit'd public wrapper), ref.py (pure-jnp oracle the tests assert
+# against). dispatch.py resolves interpret-vs-compiled per backend
+# (REPRO_PALLAS_INTERPRET / REPRO_RANK_IMPL override) so the same call sites
+# run fast on TPU/GPU and still pass on CPU CI.
 #
 #   flash_attention — blocked causal/sliding-window GQA attention
-#   triple_score    — blocked pairwise TransE scoring (link-prediction eval)
+#   triple_score    — blocked pairwise TransE scoring + the streaming
+#                     fused-rank link-prediction engine (in-kernel rank
+#                     accumulation with CSR-style filter exclusion)
 #   csls            — fused-normalization cosine-similarity matmul for CSLS
 #   ssd_scan        — Mamba2 SSD intra-chunk kernel

@@ -1,22 +1,28 @@
-"""jit'd wrappers: padded cosine tile kernel + top-k CSLS assembly."""
+"""jit'd wrappers: padded cosine tile kernel + top-k CSLS assembly.
+
+``interpret=None`` auto-resolves via ``kernels.dispatch`` (compiled Pallas on
+TPU/GPU, interpreter on CPU; ``REPRO_PALLAS_INTERPRET`` overrides).
+"""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.csls.csls import cosine_matrix_fwd
+from repro.kernels.dispatch import resolve_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("block_a", "block_b", "interpret"))
-def cosine_matrix(
+def _cosine_matrix_jit(
     a: jnp.ndarray,
     b: jnp.ndarray,
     *,
-    block_a: int = 128,
-    block_b: int = 128,
-    interpret: bool = True,
+    block_a: int,
+    block_b: int,
+    interpret: bool,
 ) -> jnp.ndarray:
     n, m = a.shape[0], b.shape[0]
     ba, bb = min(block_a, n), min(block_b, m)
@@ -29,12 +35,33 @@ def cosine_matrix(
     return out[:n, :m]
 
 
+def cosine_matrix(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    block_a: int = 128,
+    block_b: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    return _cosine_matrix_jit(
+        a, b, block_a=block_a, block_b=block_b,
+        interpret=resolve_interpret(interpret),
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
-def csls_matrix(a: jnp.ndarray, b: jnp.ndarray, *, k: int = 10, interpret: bool = True):
+def _csls_matrix_jit(a: jnp.ndarray, b: jnp.ndarray, *, k: int, interpret: bool):
     """CSLS(a_i, b_j) = 2·cos − r_A − r_B, cosine tiles via the Pallas kernel."""
-    sim = cosine_matrix(a, b, interpret=interpret)
+    sim = _cosine_matrix_jit(a, b, block_a=128, block_b=128, interpret=interpret)
     kk = min(k, sim.shape[1])
     kk2 = min(k, sim.shape[0])
     r_a = jnp.mean(jax.lax.top_k(sim, kk)[0], axis=1)
     r_b = jnp.mean(jax.lax.top_k(sim.T, kk2)[0], axis=1)
     return 2 * sim - r_a[:, None] - r_b[None, :]
+
+
+def csls_matrix(
+    a: jnp.ndarray, b: jnp.ndarray, *, k: int = 10,
+    interpret: Optional[bool] = None,
+):
+    return _csls_matrix_jit(a, b, k=k, interpret=resolve_interpret(interpret))

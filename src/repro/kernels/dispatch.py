@@ -1,0 +1,68 @@
+"""Backend auto-dispatch for the Pallas kernel families.
+
+Every kernel wrapper takes ``interpret=None`` by default and resolves it here:
+
+  1. an explicit ``True``/``False`` from the caller always wins;
+  2. else the ``REPRO_PALLAS_INTERPRET`` env var (``1/true/on`` or ``0/false/off``)
+     overrides the backend heuristic — useful to force-compile on CPU or debug
+     on TPU without touching call sites;
+  3. else resolve from ``jax.default_backend()``: compiled Pallas on TPU/GPU,
+     interpreter on CPU (the CI container), so the same call sites run fast on
+     accelerators and still pass on CPU CI.
+
+The streaming rank engine additionally picks an *implementation*: the Pallas
+fused-rank kernel on TPU (its accumulation grid relies on sequential grid
+execution), or a jnp ``lax.scan`` streaming equivalent everywhere else — on
+GPU the Triton grid runs in parallel (the revisited output block would race),
+and on CPU interpret-mode Pallas re-traces the kernel body per grid step,
+far slower than one compiled XLA loop. ``REPRO_RANK_IMPL`` overrides
+(``pallas`` | ``xla``).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+
+#: backends with a real Mosaic/Triton Pallas lowering
+COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def _env_flag(name: str) -> Optional[bool]:
+    raw = os.environ.get(name, "").strip().lower()
+    if raw in _TRUTHY:
+        return True
+    if raw in _FALSY:
+        return False
+    return None
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve the ``interpret=`` flag for a ``pl.pallas_call``."""
+    if interpret is not None:
+        return bool(interpret)
+    env = _env_flag("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env
+    return jax.default_backend() not in COMPILED_BACKENDS
+
+
+def resolve_rank_impl(impl: Optional[str] = None) -> str:
+    """Pick the fused-rank engine implementation: ``pallas`` or ``xla``.
+
+    The fused-rank kernel revisits its output block across the entity grid
+    axis (``index_map`` ignores j), which is only sound where grid steps run
+    sequentially — TPU. On GPU the Triton grid is parallel, so auto picks the
+    ``xla`` scan there too; ``REPRO_RANK_IMPL=pallas`` can force it for
+    experimentation."""
+    if impl is None:
+        impl = os.environ.get("REPRO_RANK_IMPL", "").strip().lower() or None
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl not in ("pallas", "xla"):
+        raise ValueError(f"unknown rank-engine impl {impl!r} (pallas|xla)")
+    return impl

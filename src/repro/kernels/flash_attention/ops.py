@@ -1,21 +1,42 @@
 """Public jit'd wrapper for the flash-attention kernel.
 
-``interpret`` defaults to True in this CPU container (the kernel body runs in
-Python for correctness validation); on real TPU pass interpret=False.
+``interpret=None`` auto-resolves via ``kernels.dispatch`` (compiled Pallas on
+TPU/GPU, interpreter on CPU; ``REPRO_PALLAS_INTERPRET`` overrides).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import resolve_interpret
 from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
 
 
 @functools.partial(
     jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
 )
+def _flash_attention_jit(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool,
+    window: int,
+    block_q: int,
+    block_k: int,
+    interpret: bool,
+) -> jnp.ndarray:
+    return flash_attention_fwd(
+        q, k, v,
+        causal=causal, window=window,
+        block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )
+
+
 def flash_attention(
     q: jnp.ndarray,
     k: jnp.ndarray,
@@ -25,12 +46,11 @@ def flash_attention(
     window: int = 0,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """q: (B, H, S, Dh); k/v: (B, KV, T, Dh) with H % KV == 0 → (B, H, S, Dh)."""
-    return flash_attention_fwd(
-        q, k, v,
-        causal=causal, window=window,
+    return _flash_attention_jit(
+        q, k, v, causal=causal, window=window,
         block_q=block_q, block_k=block_k,
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )

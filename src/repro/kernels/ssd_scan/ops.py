@@ -1,7 +1,8 @@
 """jit'd wrapper: Pallas intra-chunk kernel + lax.scan inter-chunk recurrence.
 
 Drop-in equivalent of ``repro.models.ssm.ssd`` (the pure-jnp path): same
-(B, S, H, P) interface, same outputs.
+(B, S, H, P) interface, same outputs. ``interpret=None`` auto-resolves via
+``kernels.dispatch`` (``REPRO_PALLAS_INTERPRET`` overrides).
 """
 from __future__ import annotations
 
@@ -11,11 +12,29 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import resolve_interpret
 from repro.kernels.ssd_scan.ssd_scan import ssd_chunks_fwd
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_chunk_kernel_apply(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    a: jnp.ndarray,
+    bm: jnp.ndarray,
+    cm: jnp.ndarray,
+    *,
+    chunk: int = 256,
+    state: Optional[jnp.ndarray] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    return _ssd_chunk_kernel_jit(
+        x, dt, a, bm, cm, chunk=chunk, state=state,
+        interpret=resolve_interpret(interpret),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _ssd_chunk_kernel_jit(
     x: jnp.ndarray,   # (B, S, H, P)
     dt: jnp.ndarray,  # (B, S, H)
     a: jnp.ndarray,   # (H,)

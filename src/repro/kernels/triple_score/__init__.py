@@ -1,2 +1,5 @@
-from repro.kernels.triple_score.ops import pairwise_scores  # noqa: F401
-from repro.kernels.triple_score.ref import pairwise_scores_ref  # noqa: F401
+from repro.kernels.triple_score.ops import fused_ranks, pairwise_scores  # noqa: F401
+from repro.kernels.triple_score.ref import (  # noqa: F401
+    fused_ranks_ref,
+    pairwise_scores_ref,
+)

@@ -1,12 +1,38 @@
-"""Pure-jnp oracle for pairwise translational scores."""
+"""Pure-jnp oracles for pairwise translational scores and fused ranks."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
-def pairwise_scores_ref(q: jnp.ndarray, ent: jnp.ndarray, *, ord_: int = 1) -> jnp.ndarray:
-    """(B, d) × (E, d) → (B, E); score = −‖q_i − e_j‖_ord."""
-    diff = q[:, None, :].astype(jnp.float32) - ent[None, :, :].astype(jnp.float32)
-    if ord_ == 2:
+def _scores_ref(q: jnp.ndarray, ent: jnp.ndarray, mode: str) -> jnp.ndarray:
+    q = q.astype(jnp.float32)
+    ent = ent.astype(jnp.float32)
+    if mode == "dot":
+        return q @ ent.T
+    diff = q[:, None, :] - ent[None, :, :]
+    if mode == "l2":
         return -jnp.sqrt(jnp.sum(jnp.square(diff), axis=-1) + 1e-12)
     return -jnp.sum(jnp.abs(diff), axis=-1)
+
+
+def pairwise_scores_ref(
+    q: jnp.ndarray, ent: jnp.ndarray, *, ord_: int = 1, mode: str | None = None
+) -> jnp.ndarray:
+    """(B, d) × (E, d) → (B, E); score = −‖q_i − e_j‖_ord (or q·e for dot)."""
+    return _scores_ref(q, ent, mode or ("l2" if ord_ == 2 else "l1"))
+
+
+def fused_ranks_ref(
+    q: jnp.ndarray,     # (B, d)
+    ent: jnp.ndarray,   # (E, d)
+    gold: jnp.ndarray,  # (B,) gold scores
+    filt: jnp.ndarray,  # (B, F) int32 known-true ids, pad −1
+    *,
+    mode: str = "l1",
+) -> jnp.ndarray:
+    """Oracle for the streaming kernel — materializes (B, E); tests only."""
+    s = _scores_ref(q, ent, mode)  # (B, E)
+    ids = jnp.arange(ent.shape[0], dtype=jnp.int32)
+    excl = jnp.any(filt[:, :, None] == ids[None, None, :], axis=1)  # (B, E)
+    beats = (s > gold[:, None]) & jnp.logical_not(excl)
+    return jnp.sum(beats.astype(jnp.int32), axis=1)

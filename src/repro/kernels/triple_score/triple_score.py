@@ -9,6 +9,17 @@ materializes in HBM.
 VMEM per step: Bq·d + Be·d + Bq·Be·d (intermediate) fp32. Defaults
 (8, 256, d≤256) → ~2 MB. For L2 the expansion ||q−e||² = |q|²−2q·e+|e|² routes
 the dominant term through the MXU.
+
+Two kernels share the tile math:
+
+  * ``pairwise_scores_fwd`` — writes the (B, E) score matrix (training-time
+    uses, small E);
+  * ``fused_rank_fwd`` — the streaming rank engine: each grid step compares
+    its tile against the per-query gold score and accumulates
+    ``rank_j += Σ 1[score > gold]`` into a (B, 1) int32 output that is
+    revisited across the entity grid axis (index_map ignores j), with filter
+    exclusion applied in-kernel from a padded known-true index tensor. The
+    (B, E) matrix never exists anywhere.
 """
 from __future__ import annotations
 
@@ -18,38 +29,50 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+#: score tile modes: L1/L2 Minkowski (negated distance) or plain dot product
+SCORE_MODES = ("l1", "l2", "dot")
 
-def _score_kernel(q_ref, e_ref, o_ref, *, ord_: int):
-    q = q_ref[...].astype(jnp.float32)  # (Bq, d)
-    e = e_ref[...].astype(jnp.float32)  # (Be, d)
-    if ord_ == 2:
+
+def _tile_scores(q: jnp.ndarray, e: jnp.ndarray, mode: str) -> jnp.ndarray:
+    """(Bq, d) × (Be, d) → (Bq, Be) scores, higher = better."""
+    if mode == "dot":
+        return jax.lax.dot_general(
+            q, e, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+    if mode == "l2":
         qq = jnp.sum(q * q, axis=1)[:, None]
         ee = jnp.sum(e * e, axis=1)[None, :]
         qe = jax.lax.dot_general(
             q, e, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )
         d2 = jnp.maximum(qq - 2.0 * qe + ee, 0.0)
-        o_ref[...] = (-jnp.sqrt(d2 + 1e-12)).astype(o_ref.dtype)
-    else:
-        diff = jnp.abs(q[:, None, :] - e[None, :, :])  # (Bq, Be, d)
-        o_ref[...] = (-jnp.sum(diff, axis=-1)).astype(o_ref.dtype)
+        return -jnp.sqrt(d2 + 1e-12)
+    diff = jnp.abs(q[:, None, :] - e[None, :, :])  # (Bq, Be, d)
+    return -jnp.sum(diff, axis=-1)
+
+
+def _score_kernel(q_ref, e_ref, o_ref, *, mode: str):
+    q = q_ref[...].astype(jnp.float32)  # (Bq, d)
+    e = e_ref[...].astype(jnp.float32)  # (Be, d)
+    o_ref[...] = _tile_scores(q, e, mode).astype(o_ref.dtype)
 
 
 def pairwise_scores_fwd(
     q: jnp.ndarray,  # (B, d) queries (h + r)
     ent: jnp.ndarray,  # (E, d) entity table
     *,
-    ord_: int = 1,
+    mode: str = "l1",
     block_q: int = 8,
     block_e: int = 256,
     interpret: bool = True,
 ) -> jnp.ndarray:
     b, d = q.shape
     e, _ = ent.shape
+    assert mode in SCORE_MODES, mode
     block_q = min(block_q, b)
     block_e = min(block_e, e)
     assert b % block_q == 0 and e % block_e == 0, (b, e, block_q, block_e)
-    kernel = functools.partial(_score_kernel, ord_=ord_)
+    kernel = functools.partial(_score_kernel, mode=mode)
     return pl.pallas_call(
         kernel,
         grid=(b // block_q, e // block_e),
@@ -61,3 +84,81 @@ def pairwise_scores_fwd(
         out_shape=jax.ShapeDtypeStruct((b, e), jnp.float32),
         interpret=interpret,
     )(q, ent)
+
+
+# --------------------------------------------------------------------------
+# streaming fused-rank kernel
+# --------------------------------------------------------------------------
+def _fused_rank_kernel(
+    q_ref,      # (Bq, d) query block
+    g_ref,      # (Bq, 1) gold score per query
+    f_ref,      # (Bq, F) known-true entity ids (pad −1; gold always present)
+    e_ref,      # (Be, d) entity block
+    o_ref,      # (Bq, 1) int32 rank counts — revisited across j
+    *,
+    mode: str,
+    block_e: int,
+    num_entities: int,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[...].astype(jnp.float32)
+    e = e_ref[...].astype(jnp.float32)
+    s = _tile_scores(q, e, mode)  # (Bq, Be)
+    bq, be = s.shape
+
+    # global entity ids of this tile's columns; ids ≥ num_entities are padding
+    col = j * block_e + jax.lax.broadcasted_iota(jnp.int32, (bq, be), 1)
+    valid = col < num_entities
+    # in-kernel filter: exclude every known-true id listed for each query
+    filt = f_ref[...]  # (Bq, F) int32
+    excl = jnp.any(filt[:, :, None] == col[:, None, :], axis=1)  # (Bq, Be)
+
+    beats = (s > g_ref[...]) & valid & jnp.logical_not(excl)
+    o_ref[...] += jnp.sum(beats.astype(jnp.int32), axis=1, keepdims=True)
+
+
+def fused_rank_fwd(
+    q: jnp.ndarray,     # (B, d)
+    ent: jnp.ndarray,   # (E_pad, d) entity table (rows ≥ num_entities ignored)
+    gold: jnp.ndarray,  # (B, 1) float32 gold scores
+    filt: jnp.ndarray,  # (B, F) int32 known-true ids, pad −1
+    *,
+    mode: str = "l1",
+    num_entities: int,
+    block_q: int = 8,
+    block_e: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Filtered rank counts: out[i] = Σ_e 1[score(q_i, e) > gold_i], with
+    entities listed in ``filt[i]`` and padding rows excluded. Rank = out + 1.
+    """
+    b, d = q.shape
+    e, _ = ent.shape
+    assert mode in SCORE_MODES, mode
+    block_q = min(block_q, b)
+    block_e = min(block_e, e)
+    assert b % block_q == 0 and e % block_e == 0, (b, e, block_q, block_e)
+    f = filt.shape[1]
+    kernel = functools.partial(
+        _fused_rank_kernel, mode=mode, block_e=block_e, num_entities=num_entities
+    )
+    return pl.pallas_call(
+        kernel,
+        # j (entity axis) is the minormost grid dim → the (i, 0) output block
+        # is revisited across consecutive steps: the accumulation grid.
+        grid=(b // block_q, e // block_e),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, f), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_e, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        interpret=interpret,
+    )(q, gold, filt, ent)

@@ -138,17 +138,79 @@ def normalize_entities(params: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]
     return out
 
 
-def score_all_tails(params, m: KGEModel, h: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+# ---------------------------------------------------------------------------
+# link-prediction query decomposition — the streaming-rank-engine surface
+# ---------------------------------------------------------------------------
+# A family is "decomposable" when score(q, e) factors into a per-query vector
+# against a query-independent entity table: score = −‖q − ent[e]‖ (l1/l2) or
+# q · ent[e] (dot). That is exactly the contract of the Pallas triple_score
+# kernels; TransH/R/D project the *entity* table per relation, so a mixed-
+# relation batch has no shared table and falls back to index expansion.
+
+
+def lp_query_tails(params, m: KGEModel, h: jnp.ndarray, r: jnp.ndarray):
+    """(query (B,d), entity table (E,d), mode) for tail ranking, or None."""
+    if m.family == "transe":
+        q = params["ent"][h] + params["rel"][r]
+        return q, params["ent"], ("l2" if m.norm_ord == 2 else "l1")
+    if m.family == "distmult":
+        return params["ent"][h] * params["rel"][r], params["ent"], "dot"
+    return None
+
+
+def lp_query_heads(params, m: KGEModel, r: jnp.ndarray, t: jnp.ndarray):
+    """(query (B,d), entity table (E,d), mode) for head ranking, or None."""
+    if m.family == "transe":
+        q = params["ent"][t] - params["rel"][r]
+        return q, params["ent"], ("l2" if m.norm_ord == 2 else "l1")
+    if m.family == "distmult":
+        return params["rel"][r] * params["ent"][t], params["ent"], "dot"
+    return None
+
+
+def lp_gold_scores(q: jnp.ndarray, ent: jnp.ndarray, idx: jnp.ndarray, mode: str):
+    """Gather gold scores with the SAME expansion the tile kernel uses, so the
+    gold entity's in-tile score differs from its gathered score only by fp
+    noise (and the engine excludes gold via the filter row anyway)."""
+    e = ent[idx].astype(jnp.float32)
+    q = q.astype(jnp.float32)
+    if mode == "dot":
+        return jnp.sum(q * e, axis=-1)
+    if mode == "l2":
+        d2 = jnp.sum(q * q, -1) - 2.0 * jnp.sum(q * e, -1) + jnp.sum(e * e, -1)
+        return -jnp.sqrt(jnp.maximum(d2, 0.0) + 1e-12)
+    return -jnp.sum(jnp.abs(q - e), axis=-1)
+
+
+def _use_score_kernel(via_kernel: bool | None) -> bool:
+    if via_kernel is not None:
+        return via_kernel
+    from repro.kernels.dispatch import COMPILED_BACKENDS
+
+    # compiled Pallas backends route through the tiled kernel (write-once
+    # tiles — safe on TPU and GPU); CPU CI keeps the numerically-identical
+    # jnp broadcast (interpret mode would be slower)
+    return jax.default_backend() in COMPILED_BACKENDS
+
+
+def score_all_tails(
+    params, m: KGEModel, h: jnp.ndarray, r: jnp.ndarray,
+    *, via_kernel: bool | None = None,
+) -> jnp.ndarray:
     """Score (h, r, ·) against every entity → (B, E). Used by link prediction."""
     e = m.num_entities
     ent = params["ent"]
 
-    if m.family == "transe":
-        q = params["ent"][h] + params["rel"][r]  # (B,d)
-        return -_norm(q[:, None, :] - ent[None], m.norm_ord)
-    if m.family == "distmult":
-        q = params["ent"][h] * params["rel"][r]
-        return q @ ent.T
+    qd = lp_query_tails(params, m, h, r)
+    if qd is not None:
+        q, table, mode = qd
+        if _use_score_kernel(via_kernel):
+            from repro.kernels.triple_score import pairwise_scores
+
+            return pairwise_scores(q, table, mode=mode)
+        if mode == "dot":
+            return q @ table.T
+        return -_norm(q[:, None, :] - table[None], m.norm_ord)
     # generic fallback: score against every entity by index expansion
     b = h.shape[0]
     t_all = jnp.arange(e)
@@ -158,10 +220,20 @@ def score_all_tails(params, m: KGEModel, h: jnp.ndarray, r: jnp.ndarray) -> jnp.
     return score_triples(params, m, hh, rr, tt).reshape(b, e)
 
 
-def score_all_heads(params, m: KGEModel, r: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
-    if m.family == "transe":
-        q = params["ent"][t] - params["rel"][r]
-        return -_norm(q[:, None, :] - params["ent"][None], m.norm_ord)
+def score_all_heads(
+    params, m: KGEModel, r: jnp.ndarray, t: jnp.ndarray,
+    *, via_kernel: bool | None = None,
+) -> jnp.ndarray:
+    qd = lp_query_heads(params, m, r, t)
+    if qd is not None:
+        q, table, mode = qd
+        if _use_score_kernel(via_kernel):
+            from repro.kernels.triple_score import pairwise_scores
+
+            return pairwise_scores(q, table, mode=mode)
+        if mode == "dot":
+            return q @ table.T
+        return -_norm(q[:, None, :] - table[None], m.norm_ord)
     b = t.shape[0]
     e = m.num_entities
     h_all = jnp.arange(e)

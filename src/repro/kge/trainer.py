@@ -127,7 +127,9 @@ class KGETrainer:
             order = self.rng.permutation(len(tr))
             nb = len(tr) // b
             pos = tr[order[: nb * b]].reshape(nb, b, 3)
-            neg = corrupt_triples(self.rng, pos.reshape(-1, 3), self.kg.num_entities)
+            # corrupt against the EXTENDED entity count so virtual rows are
+            # sampled as negatives while a virtual extension is active
+            neg = corrupt_triples(self.rng, pos.reshape(-1, 3), self.model.num_entities)
             neg = neg.reshape(nb, b, 3)
             self.params, l = _epoch(
                 self.params, self.model, jnp.asarray(pos), jnp.asarray(neg),

@@ -31,7 +31,12 @@ from repro.configs.base import INPUT_SHAPES
 from repro.configs.registry import ARCHS, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.workloads import make_workload, supported
-from repro.utils.hlo import collective_bytes, loop_aware_collective_bytes
+from repro.utils.hlo import (
+    collective_bytes,
+    cost_analysis_dict,
+    loop_aware_collective_bytes,
+    peak_memory_bytes,
+)
 from repro.utils.roofline import roofline_terms
 
 
@@ -60,7 +65,7 @@ def dryrun_one(
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     hlo_text = compiled.as_text()
     coll = collective_bytes(hlo_text)
     coll_corrected = loop_aware_collective_bytes(hlo_text)
@@ -77,7 +82,7 @@ def dryrun_one(
             "argument_bytes_per_device": int(mem.argument_size_in_bytes),
             "output_bytes_per_device": int(mem.output_size_in_bytes),
             "temp_bytes_per_device": int(mem.temp_size_in_bytes),
-            "peak_bytes_per_device": int(mem.peak_memory_in_bytes),
+            "peak_bytes_per_device": peak_memory_bytes(mem),
         },
         "cost": {
             "flops": float(cost.get("flops", 0.0)),

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import dtype_of
+from repro.sharding.context import shard_map_compat
 
 
 def init_moe(key, cfg, d: int) -> dict:
@@ -330,7 +331,7 @@ def apply_moe_alltoall(
             router, w_gate, w_up, w_down, shared_tuple if shared_tuple else None, xl
         )
 
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         wrapper,
         mesh=mesh,
         in_specs=(
@@ -342,7 +343,7 @@ def apply_moe_alltoall(
             batch_spec,                   # x
         ),
         out_specs=(batch_spec, P()),
-        check_vma=False,
+        check=False,
     )
     return fn(
         params["router"], params["w_gate"], params["w_up"], params["w_down"],

@@ -1,1 +1,5 @@
-from repro.serving.engine import ServingEngine, Request  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    KGECandidateRanker,
+    Request,
+    ServingEngine,
+)

@@ -12,6 +12,7 @@ slot's length are masked by its position).
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -21,6 +22,146 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import decode_step, init_cache, prefill
+
+
+# ---------------------------------------------------------------------------
+# KGE candidate ranking service
+# ---------------------------------------------------------------------------
+class KGECandidateRanker:
+    """Serving-side link-prediction: filtered ranks and streaming top-k
+    candidates over a trained KGE model.
+
+    Ranking goes through the streaming fused-rank engine
+    (``kernels.triple_score.fused_ranks``), candidate retrieval through a
+    blockwise ``lax.scan`` top-k merge — in both cases the (B, E) score
+    matrix never materializes, so a ranker over a 10⁶-entity table serves
+    from O(B·block_e) working memory per step.
+    """
+
+    def __init__(self, params, model, known_triples=None, *, block_e: int = 2048,
+                 impl: Optional[str] = None):
+        from repro.kge.eval import _filter_mask
+
+        self.params = params
+        self.model = model
+        self.block_e = block_e
+        self.impl = impl
+        known = (
+            np.zeros((0, 3), np.int64) if known_triples is None
+            else np.asarray(known_triples)
+        )
+        self._hr_t, self._rt_h = _filter_mask(known, model.num_entities)
+
+    # ---- filtered ranking ------------------------------------------------
+    def _filt_rows(self, lookup, keys, gold):
+        rows = [sorted(set(lookup.get(k, ())) | {int(g)}) for k, g in zip(keys, gold)]
+        width = max(len(x) for x in rows)
+        out = np.full((len(rows), width), -1, np.int32)
+        for i, x in enumerate(rows):
+            out[i, : len(x)] = x
+        return out
+
+    def rank_tails(self, h, r, t) -> np.ndarray:
+        """Filtered rank of each gold tail t among all entities — (B,) int."""
+        from repro.kge.eval import streaming_side_counts
+
+        h, r, t = (np.asarray(x, np.int64).reshape(-1) for x in (h, r, t))
+        chunk = np.stack([h, r, t], axis=1)
+        filt_t = self._filt_rows(self._hr_t, zip(h.tolist(), r.tolist()), t)
+        counts = streaming_side_counts(
+            self.params, self.model, chunk, filt_t, side="tail",
+            block_e=self.block_e, impl=self.impl,
+        )
+        return counts + 1
+
+    # ---- streaming top-k candidates --------------------------------------
+    def topk_tails(self, h, r, k: int = 10, *, exclude_known: bool = True):
+        """Top-k candidate tails for (h, r, ·) queries → (ids, scores), each
+        (B, k). Streams the entity table blockwise with a carried top-k."""
+        from repro.kge.models import lp_query_tails
+
+        h = jnp.asarray(np.asarray(h, np.int64).reshape(-1))
+        r = jnp.asarray(np.asarray(r, np.int64).reshape(-1))
+        b = h.shape[0]
+        if exclude_known and self._hr_t:
+            width = max(len(v) for v in self._hr_t.values())
+            filt = np.full((b, width), -1, np.int32)
+            for i, key in enumerate(zip(np.asarray(h).tolist(),
+                                        np.asarray(r).tolist())):
+                known = sorted(self._hr_t.get(key, ()))
+                filt[i, : len(known)] = known
+        else:
+            filt = np.full((b, 1), -1, np.int32)
+
+        qd = lp_query_tails(self.params, self.model, h, r)
+        if qd is not None:
+            q, table, mode = qd
+            vals, ids = _streaming_topk_decomposed(
+                q, table, jnp.asarray(filt), k=k, block_e=self.block_e, mode=mode
+            )
+        else:
+            vals, ids = _streaming_topk_generic(
+                self.params, self.model, h, r, jnp.asarray(filt),
+                k=k, block_e=self.block_e,
+            )
+        return np.asarray(ids), np.asarray(vals)
+
+
+def _topk_scan(score_block, b, e, filt, *, k, block_e):
+    """Shared blockwise top-k merge: carry (vals, ids), fold in one entity
+    block per step. ``score_block(ids_block) → (B, Be)`` scores."""
+    be = min(block_e, e)
+    n_blocks = -(-e // be)
+    cols = jnp.arange(n_blocks * be, dtype=jnp.int32).reshape(n_blocks, be)
+
+    def step(carry, cb):
+        vals, ids = carry  # (B, k)
+        s = score_block(cb)  # (B, Be)
+        excl = jnp.any(filt[:, :, None] == cb[None, None, :], axis=1)
+        s = jnp.where(excl | (cb >= e)[None, :], -jnp.inf, s)
+        allv = jnp.concatenate([vals, s], axis=1)
+        alli = jnp.concatenate([ids, jnp.tile(cb[None], (vals.shape[0], 1))], 1)
+        nv, sel = jax.lax.top_k(allv, vals.shape[1])
+        ni = jnp.take_along_axis(alli, sel, axis=1)
+        return (nv, ni), None
+
+    init = (
+        jnp.full((b, min(k, e)), -jnp.inf, jnp.float32),
+        jnp.full((b, min(k, e)), -1, jnp.int32),
+    )
+    (vals, ids), _ = jax.lax.scan(step, init, cols)
+    return vals, ids
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_e", "mode"))
+def _streaming_topk_decomposed(q, table, filt, *, k, block_e, mode):
+    from repro.kernels.triple_score.triple_score import _tile_scores
+
+    e = table.shape[0]
+
+    def score_block(cb):
+        eb = table[jnp.clip(cb, 0, e - 1)]
+        return _tile_scores(q.astype(jnp.float32), eb.astype(jnp.float32), mode)
+
+    return _topk_scan(score_block, q.shape[0], e, filt, k=k, block_e=block_e)
+
+
+@functools.partial(jax.jit, static_argnames=("model", "k", "block_e"))
+def _streaming_topk_generic(params, model, h, r, filt, *, k, block_e):
+    from repro.kge.models import score_triples
+
+    b = h.shape[0]
+    e = model.num_entities
+
+    def score_block(cb):
+        ids = jnp.clip(cb, 0, e - 1)
+        be = ids.shape[0]
+        hh = jnp.repeat(h[:, None], be, axis=1).reshape(-1)
+        rr = jnp.repeat(r[:, None], be, axis=1).reshape(-1)
+        tt = jnp.tile(ids[None], (b, 1)).reshape(-1)
+        return score_triples(params, model, hh, rr, tt).reshape(b, be)
+
+    return _topk_scan(score_block, b, e, filt, k=k, block_e=block_e)
 
 
 @dataclass
