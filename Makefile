@@ -1,12 +1,14 @@
 PY := PYTHONPATH=src python
 
-.PHONY: tier1 test bench-eval bench
+.PHONY: tier1 test bench-eval bench-train bench
 
-# CI gate: the full suite, then the eval-engine parity tests explicitly
-# (they are the acceptance bar for the streaming fused-rank engine).
+# CI gate: the full suite, then the engine parity tests explicitly (they are
+# the acceptance bars for the streaming fused-rank eval engine and the
+# device-resident training engine).
 tier1:
 	$(PY) -m pytest -x -q
 	$(PY) -m pytest -q tests/test_eval_engine.py -k "parity"
+	$(PY) -m pytest -q tests/test_train_engine.py -k "parity or retrace"
 
 test:
 	$(PY) -m pytest -q
@@ -14,6 +16,10 @@ test:
 # old-path vs fused-rank engine µs/query at E ∈ {10k, 100k}; appends CSV rows
 bench-eval:
 	PYTHONPATH=src:. python benchmarks/bench_eval_engine.py --csv benchmarks/eval_engine.csv
+
+# seed dense path vs device-resident training engine µs/step at E ∈ {10k, 100k}
+bench-train:
+	PYTHONPATH=src:. python benchmarks/bench_train_engine.py --csv benchmarks/train_engine.csv
 
 bench:
 	PYTHONPATH=src:. python benchmarks/run.py

@@ -19,6 +19,7 @@ from benchmarks import (
     bench_privacy,
     bench_roofline,
     bench_time_cost,
+    bench_train_engine,
     bench_triple_classification,
 )
 
@@ -30,6 +31,7 @@ SUITES = [
     ("triple_classification", bench_triple_classification.main),  # Fig. 4/5
     ("link_prediction", bench_link_prediction.main),              # Tab. 4
     ("eval_engine", lambda: bench_eval_engine.main([])),          # fused ranks
+    ("train_engine", lambda: bench_train_engine.main([])),        # sparse scan
     ("noise_ablation", bench_noise_ablation.main),                # Tab. 5
     ("alignment_scale", bench_alignment_scale.main),              # Tab. 6
     ("aggregation", bench_aggregation.main),                      # Tab. 7

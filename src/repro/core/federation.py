@@ -102,6 +102,9 @@ class FederationScheduler:
         self.score_fn = score_fn or default_score
         self.state: Dict[str, NodeState] = {n: NodeState.READY for n in kgs}
         self.queue: Dict[str, deque] = {n: deque() for n in kgs}
+        # membership mirror of each queue: broadcast() dedupes handshake
+        # offers in O(1) instead of scanning the deque per partner
+        self._queued: Dict[str, set] = {n: set() for n in kgs}
         self.best_score: Dict[str, float] = {}
         self.best_snapshot: Dict[str, dict] = {}
         self.events: List[FederationEvent] = []
@@ -165,10 +168,16 @@ class FederationScheduler:
     def broadcast(self, name: str) -> None:
         """Send handshake signal to all partners with aligned entities."""
         for partner in self.registry.partners(name):
-            if name not in self.queue[partner]:
+            if name not in self._queued[partner]:
                 self.queue[partner].append(name)
+                self._queued[partner].add(name)
             if self.state[partner] is NodeState.SLEEP:
                 self.state[partner] = NodeState.READY  # wake-up signal
+
+    def _pop_offer(self, name: str) -> str:
+        client = self.queue[name].popleft()
+        self._queued[name].discard(client)
+        return client
 
     def federate_once(self, host: str, client: str) -> FederationEvent:
         """ActiveHandshake + KGEmb-Update + Backtrack for one (client, host)."""
@@ -272,7 +281,7 @@ class FederationScheduler:
                 if self.state[name] is not NodeState.READY:
                     continue
                 if self.queue[name]:
-                    client = self.queue[name].popleft()
+                    client = self._pop_offer(name)
                     ev = self.federate_once(name, client)
                     any_progress = any_progress or ev.accepted
                 elif self_train:

@@ -12,6 +12,11 @@ ever ships ``∂L_G/∂G(X)`` (size batch×d) back. Neither object ever reads th
 other's raw embeddings. The ``train_ppat`` driver moves only those two
 tensors per round, mirroring the paper's pipe IPC (and the mesh-mapped
 variant in ``core.distributed`` moves them via collective-permute).
+
+By default all adversarial rounds run as ONE compiled device scan
+(``_ppat_scan``): the host syncs metrics a single time after the last round
+instead of a ``float()`` round-trip per step, and aligned sets are
+bucket-padded so every handshake pair reuses the compiled loop.
 """
 from __future__ import annotations
 
@@ -67,8 +72,7 @@ def _sgd_momentum(params, grads, vel, lr, mom):
 
 
 # ---------------------------------------------------------------- host step (jit)
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _host_step(
+def _host_step_impl(
     host_params: dict,
     key: jax.Array,
     adv: jnp.ndarray,  # (B, d) generated samples — the ONLY client input
@@ -141,6 +145,63 @@ def _host_step(
     return new_params, grad_adv, metrics, (n0, n1)
 
 
+_host_step = functools.partial(jax.jit, static_argnames=("cfg",))(_host_step_impl)
+
+
+def _generator_update(w, vel, xb, grad_adv, cfg: PPATConfig):
+    """Chain rule through G(X)=XW (∂L/∂W = Xᵀ·∂L/∂G(X)) + momentum SGD +
+    MUSE orthogonalization — shared by the stepwise client and the fused scan."""
+    gw = xb.T @ grad_adv
+    vel = cfg.momentum * vel + gw
+    w = w - cfg.lr * vel
+    if cfg.ortho_beta:
+        b = cfg.ortho_beta
+        w = (1 + b) * w - b * (w @ w.T) @ w
+    return w, vel
+
+
+# ------------------------------------------------------- fused device loop
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _ppat_scan(
+    host_params: dict,
+    w: jnp.ndarray,
+    vel: jnp.ndarray,
+    x: jnp.ndarray,    # (Nx_pad, d) client embeddings (rows ≥ n_x are padding)
+    y: jnp.ndarray,    # (Ny_pad, d) host embeddings (rows ≥ n_y are padding)
+    n_x: jnp.ndarray,  # traced true row counts — sampling bounds
+    n_y: jnp.ndarray,
+    key: jax.Array,
+    cfg: PPATConfig,
+):
+    """Alg. 2 as ONE compiled ``lax.scan`` over all adversarial rounds.
+
+    Per round the traced graph moves exactly the two Alg.-2 tensors between
+    the client and host subgraphs — adv = G(X_b) forward, ∂L_G/∂adv backward —
+    so the structural privacy boundary of the stepwise driver is preserved;
+    the host only sees metrics (and the accountant its clean vote counts)
+    once, after the final round.
+    """
+
+    def body(carry, k):
+        hp, w, vel = carry
+        kx, ky, ks = jax.random.split(k, 3)
+        idx = jax.random.randint(kx, (cfg.batch,), 0, n_x)
+        xb = x[idx]
+        adv = xb @ w                                   # client → host
+        ridx = jax.random.randint(ky, (cfg.batch,), 0, n_y)
+        hp, grad_adv, metrics, (n0, n1) = _host_step_impl(
+            hp, ks, adv, y[ridx], cfg
+        )
+        w, vel = _generator_update(w, vel, xb, grad_adv, cfg)  # host → client
+        return (hp, w, vel), (metrics, n0, n1)
+
+    keys = jax.random.split(key, cfg.steps)
+    (host_params, w, vel), (metrics, n0s, n1s) = jax.lax.scan(
+        body, (host_params, w, vel), keys
+    )
+    return host_params, w, vel, metrics, n0s, n1s
+
+
 class PPATHost:
     """g_j side: all discriminators + the moments accountant (§3.2.2)."""
 
@@ -192,12 +253,23 @@ class PPATClient:
 
     def apply_grad(self, xb: jnp.ndarray, grad_adv: jnp.ndarray) -> None:
         """Chain rule through G(X)=XW: ∂L/∂W = Xᵀ·∂L/∂G(X)."""
-        gw = xb.T @ grad_adv
-        self.vel = self.cfg.momentum * self.vel + gw
-        self.w = self.w - self.cfg.lr * self.vel
-        if self.cfg.ortho_beta:
-            b = self.cfg.ortho_beta  # MUSE-style orthogonalization
-            self.w = (1 + b) * self.w - b * (self.w @ self.w.T) @ self.w
+        self.w, self.vel = _generator_update(
+            self.w, self.vel, xb, grad_adv, self.cfg
+        )
+
+
+#: aligned sets are zero-padded up to this row granularity before the fused
+#: scan, so handshakes with different alignment sizes reuse the compiled loop
+PPAT_BUCKET = 64
+
+
+def _pad_rows(a: jnp.ndarray, granularity: int) -> jnp.ndarray:
+    from repro.kge.engine import bucket  # shared round-up-to-bucket rule
+
+    n_pad = bucket(a.shape[0], granularity)
+    if n_pad == a.shape[0]:
+        return a
+    return jnp.pad(a, ((0, n_pad - a.shape[0]), (0, 0)))
 
 
 def train_ppat(
@@ -206,27 +278,53 @@ def train_ppat(
     cfg: Optional[PPATConfig] = None,
     *,
     key: Optional[jax.Array] = None,
+    fused: bool = True,
 ) -> Tuple[PPATClient, PPATHost, Dict]:
     """Run Alg. 2 between a client embedding set X and host set Y.
 
     Returns the trained (client, host) pair and a history dict; the caller
     obtains DP-synthesized embeddings via ``client.generate(...)`` and the
     privacy estimate via ``host.accountant.epsilon()``.
+
+    ``fused=True`` (default) runs all ``cfg.steps`` adversarial rounds as one
+    compiled device scan: batch sampling moves to ``jax.random``, the host
+    syncs metrics exactly once at the end, and the accountant consumes the
+    whole clean-vote history in one update. ``fused=False`` keeps the seed
+    stepwise driver (one ``float()`` sync per round) — the two are the same
+    algorithm with different sampling streams.
     """
     cfg = cfg or PPATConfig()
+    if x.shape[0] == 0 or y.shape[0] == 0:
+        # the stepwise path fails on the first sample; fused sampling would
+        # silently train on padding rows instead — reject up front
+        raise ValueError("train_ppat needs non-empty aligned sets "
+                         f"(got |X|={x.shape[0]}, |Y|={y.shape[0]})")
     key = key if key is not None else jax.random.PRNGKey(cfg.seed)
     dim = x.shape[1]
     kh, kc = jax.random.split(key)
     host = PPATHost(kh, dim, y, cfg)
     client = PPATClient(kc, dim, x, cfg)
     history = {"gen_loss": [], "student_loss": [], "teacher_loss": []}
-    for step in range(cfg.steps):
+    if fused:
         key, sub = jax.random.split(key)
-        xb, adv = client.sample_batch()          # client → host: adv only
-        grad_adv, metrics = host.step(sub, adv)  # host → client: grads only
-        client.apply_grad(xb, grad_adv)
+        host.params, client.w, client.vel, metrics, n0s, n1s = _ppat_scan(
+            host.params, client.w, client.vel,
+            _pad_rows(x, PPAT_BUCKET), _pad_rows(y, PPAT_BUCKET),
+            jnp.int32(x.shape[0]), jnp.int32(y.shape[0]), sub, cfg,
+        )
+        # ONE device→host sync for the whole run
+        metrics = {k: np.asarray(v) for k, v in metrics.items()}
         for k in history:
-            history[k].append(metrics[k])
+            history[k] = [float(v) for v in metrics[k]]
+        host.accountant.update(np.asarray(n0s).ravel(), np.asarray(n1s).ravel())
+    else:
+        for _ in range(cfg.steps):
+            key, sub = jax.random.split(key)
+            xb, adv = client.sample_batch()          # client → host: adv only
+            grad_adv, metrics = host.step(sub, adv)  # host → client: grads only
+            client.apply_grad(xb, grad_adv)
+            for k in history:
+                history[k].append(metrics[k])
     history["epsilon"] = host.accountant.epsilon()
     history["max_alpha"] = host.accountant.max_alpha()
     return client, host, history

@@ -17,6 +17,10 @@ GPU the Triton grid runs in parallel (the revisited output block would race),
 and on CPU interpret-mode Pallas re-traces the kernel body per grid step,
 far slower than one compiled XLA loop. ``REPRO_RANK_IMPL`` overrides
 (``pallas`` | ``xla``).
+
+The training engine picks its step implementation the same way:
+``REPRO_TRAIN_IMPL`` (``pallas`` | ``xla`` | ``reference``) overrides the
+backend heuristic in ``resolve_train_impl``.
 """
 from __future__ import annotations
 
@@ -49,6 +53,35 @@ def resolve_interpret(interpret: Optional[bool] = None) -> bool:
     if env is not None:
         return env
     return jax.default_backend() not in COMPILED_BACKENDS
+
+
+#: families whose margin-SGD step the fused sparse_update kernel covers
+SPARSE_KERNEL_FAMILIES = ("transe", "distmult")
+
+
+def resolve_train_impl(impl: Optional[str] = None, family: str = "transe") -> str:
+    """Pick the training-engine step implementation.
+
+    ``pallas`` — the fused gather→score→scatter sparse_update kernel
+    (TransE/DistMult only; its serial in-kernel scatter relies on the single
+    grid step executing sequentially, which holds everywhere, but the
+    dynamic-slice row loop only lowers well on TPU); ``xla`` — the autodiff
+    sparse step (every family, every backend; one compiled scan on CPU CI);
+    ``reference`` — the seed dense host-loop path, kept as the parity oracle.
+    ``REPRO_TRAIN_IMPL`` overrides."""
+    if impl is None:
+        impl = os.environ.get("REPRO_TRAIN_IMPL", "").strip().lower() or None
+    if impl is None:
+        impl = (
+            "pallas"
+            if jax.default_backend() == "tpu" and family in SPARSE_KERNEL_FAMILIES
+            else "xla"
+        )
+    if impl not in ("pallas", "xla", "reference"):
+        raise ValueError(f"unknown train impl {impl!r} (pallas|xla|reference)")
+    if impl == "pallas" and family not in SPARSE_KERNEL_FAMILIES:
+        impl = "xla"  # kernel does not cover this family's score math
+    return impl
 
 
 def resolve_rank_impl(impl: Optional[str] = None) -> str:

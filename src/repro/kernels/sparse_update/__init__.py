@@ -1,0 +1,6 @@
+from repro.kernels.sparse_update.ops import (  # noqa: F401
+    fused_sparse_step,
+    unique_rows,
+)
+from repro.kernels.sparse_update.ref import sparse_step_ref  # noqa: F401
+from repro.kernels.sparse_update.sparse_update import SPARSE_MODES  # noqa: F401

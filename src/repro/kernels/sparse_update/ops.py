@@ -1,0 +1,77 @@
+"""Public wrapper: unique/inverse prep, backend resolution, dispatch.
+
+``fused_sparse_step`` applies one margin-ranking SGD step to {ent, rel}
+tables touching only the rows named by the minibatch. The unique-index
+decomposition happens here (``jnp.unique`` with a static ``size`` — jit-safe)
+so duplicate rows within a batch compose into a single update; the kernel
+receives conflict-free unique row ids.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dispatch import resolve_interpret
+from repro.kernels.sparse_update.sparse_update import (
+    SPARSE_MODES,
+    sparse_sgd_step_fwd,
+)
+
+
+def unique_rows(occ: jnp.ndarray, size: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(unique ids (size,), inverse (len(occ),)). Fill slots alias row 0 —
+    always in range for the kernel's read-modify-write loop — and receive no
+    occurrences, hence zero gradient: their writes are exact no-ops."""
+    u, inv = jnp.unique(occ, return_inverse=True, size=size, fill_value=0)
+    return u.astype(jnp.int32), inv.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mode", "margin", "interpret", "unique_e", "unique_r"),
+)
+def _fused_sparse_step_jit(
+    ent, rel, pos, neg, lr, *, mode, margin, interpret, unique_e, unique_r
+):
+    b = pos.shape[0]
+    e_occ = jnp.concatenate([pos[:, 0], pos[:, 2], neg[:, 0], neg[:, 2]])
+    r_occ = jnp.concatenate([pos[:, 1], neg[:, 1]])
+    ue, inv_e = unique_rows(e_occ, unique_e or 4 * b)
+    ur, inv_r = unique_rows(r_occ, unique_r or 2 * b)
+    new_ent, new_rel, loss = sparse_sgd_step_fwd(
+        ent.astype(jnp.float32), rel.astype(jnp.float32),
+        inv_e, inv_r, ue, ur, jnp.reshape(lr, (1, 1)).astype(jnp.float32),
+        mode=mode, margin=margin, interpret=interpret,
+    )
+    return new_ent, new_rel, loss[0, 0]
+
+
+def fused_sparse_step(
+    ent: jnp.ndarray,  # (E, d) entity table
+    rel: jnp.ndarray,  # (R, d) relation table
+    pos: jnp.ndarray,  # (B, 3) int32 positive triples
+    neg: jnp.ndarray,  # (B, 3) int32 corrupted triples
+    lr,
+    *,
+    mode: str = "l1",
+    margin: float = 4.0,
+    interpret: Optional[bool] = None,
+    unique_e: Optional[int] = None,
+    unique_r: Optional[int] = None,
+):
+    """One fused gather→score→scatter SGD step → (new_ent, new_rel, loss).
+
+    ``unique_e``/``unique_r`` cap the unique-row sets (static): 3B/B when
+    ``neg`` is a 1:1 corruption of ``pos`` (the training-scan path — the
+    uncorrupted side and the relation are shared), 4B/2B for arbitrary
+    batches (default).
+    """
+    assert mode in SPARSE_MODES, mode
+    return _fused_sparse_step_jit(
+        ent, rel, pos, neg, lr, mode=mode, margin=float(margin),
+        interpret=resolve_interpret(interpret),
+        unique_e=unique_e, unique_r=unique_r,
+    )

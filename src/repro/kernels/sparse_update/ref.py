@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the fused sparse SGD step — dense autodiff, tests only."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _scores(ent, rel, tri, mode):
+    he, re, te = ent[tri[:, 0]], rel[tri[:, 1]], ent[tri[:, 2]]
+    if mode == "dot":
+        return jnp.sum(he * re * te, axis=-1)
+    d = he + re - te
+    if mode == "l2":
+        return -jnp.sqrt(jnp.sum(d * d, axis=-1) + 1e-12)
+    return -jnp.sum(jnp.abs(d), axis=-1)
+
+
+def sparse_step_ref(ent, rel, pos, neg, lr, *, mode="l1", margin=4.0):
+    """Dense margin-ranking SGD step on {ent, rel} — the parity oracle."""
+
+    def loss_fn(p):
+        sp = _scores(p["ent"], p["rel"], pos, mode)
+        sn = _scores(p["ent"], p["rel"], neg, mode)
+        return jnp.mean(jax.nn.relu(margin - sp + sn))
+
+    p = {"ent": ent.astype(jnp.float32), "rel": rel.astype(jnp.float32)}
+    loss, g = jax.value_and_grad(loss_fn)(p)
+    return p["ent"] - lr * g["ent"], p["rel"] - lr * g["rel"], loss

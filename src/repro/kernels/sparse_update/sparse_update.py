@@ -1,0 +1,188 @@
+"""Fused gather→score→scatter SGD step — the local-training hot spot.
+
+One margin-ranking SGD step on a (pos, neg) minibatch touches at most 3B
+entity rows and B relation rows, yet the dense update writes the full (E, d)
+table. This kernel keeps the embedding tables resident (aliased in/out, so
+XLA updates them in place) and moves only the touched rows:
+
+  gather   — unique touched rows are pulled out of the table with dynamic
+             row slices (``pl.ds``), never materializing the table as a value;
+  score    — margin-ranking loss + analytic gradients for the decomposable
+             hot-path families (TransE L1/L2, DistMult), vectorized over the
+             batch; per-occurrence gradients are segment-summed into unique
+             row slots with a one-hot matmul (MXU-friendly, deterministic);
+  scatter  — a serial read-modify-write loop applies ``row -= lr·g`` for each
+             unique row. Uniqueness makes the writes conflict-free; the fill
+             slots of the padded unique set carry zero gradients, so their
+             clamped writes are exact no-ops.
+
+The caller supplies the unique/inverse decomposition (``jnp.unique`` with a
+static ``size``); duplicate rows within a batch therefore compose exactly once
+into the update. Grid is (1,) — one kernel launch per optimizer step — so
+there is no cross-step write race on any backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: families the fused kernel handles: score modes of the decomposable hot path
+SPARSE_MODES = ("l1", "l2", "dot")
+
+
+def _margin_grads(he, re, te, nhe, nre, nte, *, mode: str, margin: float):
+    """Loss + analytic per-occurrence gradients of the margin ranking loss.
+
+    Matches jax autodiff conventions exactly: ``relu'(0) = 0``, ``d|x|/dx =
+    sign(x)`` (0 at 0), and the L2 norm is ``sqrt(Σx² + 1e-12)`` as in
+    ``models._norm``.
+    """
+    b = he.shape[0]
+
+    if mode == "dot":  # distmult: s = Σ h·r·t
+        sp = jnp.sum(he * re * te, axis=-1)
+        sn = jnp.sum(nhe * nre * nte, axis=-1)
+    else:
+        dp = he + re - te
+        dn = nhe + nre - nte
+        if mode == "l1":
+            sp = -jnp.sum(jnp.abs(dp), axis=-1)
+            sn = -jnp.sum(jnp.abs(dn), axis=-1)
+            gp, gn = jnp.sign(dp), jnp.sign(dn)
+        else:  # l2
+            np_ = jnp.sqrt(jnp.sum(dp * dp, axis=-1) + 1e-12)
+            nn_ = jnp.sqrt(jnp.sum(dn * dn, axis=-1) + 1e-12)
+            sp, sn = -np_, -nn_
+            gp, gn = dp / np_[:, None], dn / nn_[:, None]
+
+    act = margin - sp + sn
+    loss = jnp.mean(jnp.maximum(act, 0.0))
+    # dL/dsp_i = −a_i, dL/dsn_i = +a_i with a_i = 1[act_i > 0]/B
+    a = (act > 0).astype(jnp.float32)[:, None] / b
+
+    if mode == "dot":
+        g_he = -a * (re * te)
+        g_te = -a * (he * re)
+        g_re = -a * (he * te)
+        g_nhe = a * (nre * nte)
+        g_nte = a * (nhe * nre)
+        g_nre = a * (nhe * nte)
+    else:
+        # sp = −‖he + re − te‖ ⇒ ∂sp/∂he = −g, ∂sp/∂te = +g, ∂sp/∂re = −g
+        g_he = a * gp
+        g_te = -a * gp
+        g_re = a * gp
+        g_nhe = -a * gn
+        g_nte = a * gn
+        g_nre = -a * gn
+    return loss, (g_he, g_te, g_nhe, g_nte), (g_re, g_nre)
+
+
+def _sparse_step_kernel(
+    inv_e_ref,  # (4B,) i32 occurrence → unique-entity slot
+    inv_r_ref,  # (2B,) i32 occurrence → unique-relation slot
+    ue_ref,     # (Ue,) i32 unique entity row ids (fills clamped, zero-grad)
+    ur_ref,     # (Ur,) i32 unique relation row ids
+    lr_ref,     # (1, 1) f32 learning rate
+    ent_ref,    # (E, d) — aliased input (same buffer as ent_out)
+    rel_ref,    # (R, d) — aliased input (same buffer as rel_out)
+    ent_out,    # (E, d) in-place updated entity table
+    rel_out,    # (R, d) in-place updated relation table
+    loss_ref,   # (1, 1) f32 minibatch loss
+    *,
+    mode: str,
+    margin: float,
+    batch: int,
+):
+    del ent_ref, rel_ref  # aliased: read/write through the out refs
+    d = ent_out.shape[1]
+    b = batch
+    ue_n = ue_ref.shape[0]
+    ur_n = ur_ref.shape[0]
+
+    # ---- gather: unique rows only, via dynamic row slices ----------------
+    def g_ent(i, acc):
+        return acc.at[i, :].set(ent_out[pl.ds(ue_ref[i], 1), :][0])
+
+    erows = jax.lax.fori_loop(0, ue_n, g_ent, jnp.zeros((ue_n, d), jnp.float32))
+
+    def g_rel(i, acc):
+        return acc.at[i, :].set(rel_out[pl.ds(ur_ref[i], 1), :][0])
+
+    rrows = jax.lax.fori_loop(0, ur_n, g_rel, jnp.zeros((ur_n, d), jnp.float32))
+
+    # ---- score + analytic grads, vectorized over the batch ---------------
+    inv_e = inv_e_ref[...]
+    inv_r = inv_r_ref[...]
+    he, te = erows[inv_e[:b]], erows[inv_e[b : 2 * b]]
+    nhe, nte = erows[inv_e[2 * b : 3 * b]], erows[inv_e[3 * b :]]
+    re, nre = rrows[inv_r[:b]], rrows[inv_r[b:]]
+    loss, ent_occ, rel_occ = _margin_grads(
+        he, re, te, nhe, nre, nte, mode=mode, margin=margin
+    )
+    loss_ref[0, 0] = loss
+
+    # ---- segment-sum occurrences → unique slots (one-hot matmul) ----------
+    g_eocc = jnp.concatenate(ent_occ, axis=0)  # (4B, d)
+    g_rocc = jnp.concatenate(rel_occ, axis=0)  # (2B, d)
+    onehot_e = (inv_e[None, :] == jnp.arange(ue_n)[:, None]).astype(jnp.float32)
+    onehot_r = (inv_r[None, :] == jnp.arange(ur_n)[:, None]).astype(jnp.float32)
+    g_ent = jax.lax.dot_general(  # (Ue, 4B) @ (4B, d)
+        onehot_e, g_eocc, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    g_rel = jax.lax.dot_general(
+        onehot_r, g_rocc, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    # ---- scatter: serial read-modify-write of the unique rows -------------
+    lr = lr_ref[0, 0]
+
+    def s_ent(i, _):
+        row = ent_out[pl.ds(ue_ref[i], 1), :]
+        ent_out[pl.ds(ue_ref[i], 1), :] = row - lr * g_ent[i][None, :]
+        return 0
+
+    jax.lax.fori_loop(0, ue_n, s_ent, 0)
+
+    def s_rel(i, _):
+        row = rel_out[pl.ds(ur_ref[i], 1), :]
+        rel_out[pl.ds(ur_ref[i], 1), :] = row - lr * g_rel[i][None, :]
+        return 0
+
+    jax.lax.fori_loop(0, ur_n, s_rel, 0)
+
+
+def sparse_sgd_step_fwd(
+    ent: jnp.ndarray,    # (E, d) f32 entity table (updated in place)
+    rel: jnp.ndarray,    # (R, d) f32 relation table (updated in place)
+    inv_e: jnp.ndarray,  # (4B,) i32 [pos_h | pos_t | neg_h | neg_t] → slot
+    inv_r: jnp.ndarray,  # (2B,) i32 [pos_r | neg_r] → slot
+    ue: jnp.ndarray,     # (Ue,) i32 unique entity rows, fills clamped in-range
+    ur: jnp.ndarray,     # (Ur,) i32 unique relation rows
+    lr: jnp.ndarray,     # (1, 1) f32
+    *,
+    mode: str,
+    margin: float,
+    interpret: bool = True,
+):
+    """One fused sparse SGD step; returns (new_ent, new_rel, loss (1,1))."""
+    assert mode in SPARSE_MODES, mode
+    batch = inv_e.shape[0] // 4
+    kernel = functools.partial(
+        _sparse_step_kernel, mode=mode, margin=margin, batch=batch
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct(ent.shape, jnp.float32),
+            jax.ShapeDtypeStruct(rel.shape, jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ),
+        input_output_aliases={5: 0, 6: 1},
+        interpret=interpret,
+    )(inv_e, inv_r, ue, ur, lr, ent, rel)

@@ -12,6 +12,10 @@ def _scores_ref(q: jnp.ndarray, ent: jnp.ndarray, mode: str) -> jnp.ndarray:
     diff = q[:, None, :] - ent[None, :, :]
     if mode == "l2":
         return -jnp.sqrt(jnp.sum(jnp.square(diff), axis=-1) + 1e-12)
+    if mode == "cl1":
+        d2 = q.shape[1] // 2
+        dr, di = diff[..., :d2], diff[..., d2:]
+        return -jnp.sum(jnp.sqrt(dr * dr + di * di + 1e-12), axis=-1)
     return -jnp.sum(jnp.abs(diff), axis=-1)
 
 

@@ -29,8 +29,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-#: score tile modes: L1/L2 Minkowski (negated distance) or plain dot product
-SCORE_MODES = ("l1", "l2", "dot")
+#: score tile modes: L1/L2 Minkowski (negated distance), plain dot product,
+#: or complex-L1 ("cl1": rows are [re | im] halves, per-component modulus —
+#: the RotatE distance)
+SCORE_MODES = ("l1", "l2", "dot", "cl1")
 
 
 def _tile_scores(q: jnp.ndarray, e: jnp.ndarray, mode: str) -> jnp.ndarray:
@@ -47,6 +49,11 @@ def _tile_scores(q: jnp.ndarray, e: jnp.ndarray, mode: str) -> jnp.ndarray:
         )
         d2 = jnp.maximum(qq - 2.0 * qe + ee, 0.0)
         return -jnp.sqrt(d2 + 1e-12)
+    if mode == "cl1":
+        d2 = q.shape[1] // 2
+        dr = q[:, None, :d2] - e[None, :, :d2]  # (Bq, Be, d/2)
+        di = q[:, None, d2:] - e[None, :, d2:]
+        return -jnp.sum(jnp.sqrt(dr * dr + di * di + 1e-12), axis=-1)
     diff = jnp.abs(q[:, None, :] - e[None, :, :])  # (Bq, Be, d)
     return -jnp.sum(diff, axis=-1)
 

@@ -1,0 +1,284 @@
+"""Device-resident federated training engine.
+
+The seed trainer round-trips to host every epoch (numpy permutation + numpy
+negative sampling + one ``_epoch`` dispatch), and every minibatch applies a
+dense ``p − lr·g`` update to the full (E, d) entity table: O(E·d) work where
+O(B·d) is needed. This engine compiles ONE ``lax.scan`` over all
+epochs × minibatches:
+
+  * **on-device sampling** — per-epoch permutation and 1:1 head/tail
+    corruption via ``jax.random``; no per-epoch H2D transfer, and the
+    corruption bound is a *traced* scalar, so virtual entities are sampled as
+    negatives without retracing;
+  * **sparse updates** — each step gathers the ≤3B touched entity rows (and
+    ≤B relation rows), differentiates w.r.t. the gathered slice only, and
+    scatter-adds the update back. Duplicate rows within a batch compose
+    exactly once via the unique-index inverse (the gather backward IS the
+    segment-sum over occurrences), which makes the step bit-identical to the
+    dense reference;
+  * **bucket padding** — embedding tables round up to
+    ``ENT_BUCKET``/``REL_BUCKET`` multiples and triple stores to a
+    power-of-two minibatch count, so consecutive
+    ``federate_once`` handshakes with different virtual-extension sizes reuse
+    the compiled scan instead of retracing. Triples are padded by *cycling*
+    real triples (every padded row is a valid triple); table padding rows are
+    zeros, are never referenced by any triple, and are never sampled as
+    negatives (the corruption bound is the true count).
+
+Step implementations (``kernels.dispatch.resolve_train_impl``):
+``pallas`` — the fused gather→score→scatter ``sparse_update`` kernel
+(TransE/DistMult); ``xla`` — the autodiff sparse step (all families);
+``reference`` — the seed dense host-loop path in ``trainer._epoch``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kge.models import (
+    KGEModel,
+    margin_loss,
+    normalize_entities,
+    score_triples,
+)
+
+#: bucket granularities for the retrace-free shapes
+ENT_BUCKET = 256
+REL_BUCKET = 64
+
+#: param keys indexed by entity id; everything else is relation-indexed
+ENT_KEYS = ("ent", "ent_p", "ent_im")
+
+
+def bucket(n: int, granularity: int) -> int:
+    """Round ``n`` up to the next multiple of ``granularity`` (min 1 bucket)."""
+    return max(granularity, -(-n // granularity) * granularity)
+
+
+def shape_spec(model: KGEModel) -> KGEModel:
+    """A hashable, count-free model key for jit static args: the same spec is
+    shared by every bucket-padded table size, so handshakes that grow the
+    entity/relation counts do not retrace on the model argument."""
+    return dataclasses.replace(model, num_entities=0, num_relations=0)
+
+
+# ---------------------------------------------------------------------------
+# sparse SGD step (xla impl) — autodiff w.r.t. the gathered slice only
+# ---------------------------------------------------------------------------
+def sparse_sgd_step(
+    params: Dict[str, jnp.ndarray],
+    spec: KGEModel,
+    pos: jnp.ndarray,  # (B, 3) int32
+    neg: jnp.ndarray,  # (B, 3) int32
+    lr,
+    *,
+    unique_e: int | None = None,
+    unique_r: int | None = None,
+) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
+    """One margin-SGD step touching only the rows named by the minibatch.
+
+    ``unique_e``/``unique_r`` cap the unique-row sets (static, for jit):
+    3B/B when ``neg`` is a 1:1 corruption of ``pos`` (the scan path), 4B/2B
+    for arbitrary batches. Bit-identical to the dense reference step: the
+    forward gathers the same row values, the gather backward segment-sums
+    per-occurrence cotangents exactly as the dense scatter does, and
+    ``row.at[].add(−lr·g)`` matches ``row − lr·g`` in IEEE arithmetic.
+    """
+    b = pos.shape[0]
+    unique_e = 4 * b if unique_e is None else unique_e
+    unique_r = 2 * b if unique_r is None else unique_r
+    e_occ = jnp.concatenate([pos[:, 0], pos[:, 2], neg[:, 0], neg[:, 2]])
+    r_occ = jnp.concatenate([pos[:, 1], neg[:, 1]])
+    # fill slots index one row past the table: gathers clamp (harmless, no
+    # occurrence maps to them) and scatters drop (no write at all).
+    ue, inv_e = jnp.unique(
+        e_occ, return_inverse=True, size=unique_e,
+        fill_value=params["ent"].shape[0],
+    )
+    ur, inv_r = jnp.unique(
+        r_occ, return_inverse=True, size=unique_r,
+        fill_value=params["rel"].shape[0],
+    )
+    local = {k: params[k][ue if k in ENT_KEYS else ur] for k in params}
+    lh, lt = inv_e[:b], inv_e[b : 2 * b]
+    lnh, lnt = inv_e[2 * b : 3 * b], inv_e[3 * b :]
+    lrel, lnrel = inv_r[:b], inv_r[b:]
+
+    def loss_fn(lp):
+        sp = score_triples(lp, spec, lh, lrel, lt)
+        sn = score_triples(lp, spec, lnh, lnrel, lnt)
+        return margin_loss(sp, sn, spec.margin)
+
+    loss, g = jax.value_and_grad(loss_fn)(local)
+    new = {
+        k: params[k].at[ue if k in ENT_KEYS else ur].add(-lr * g[k], mode="drop")
+        for k in params
+    }
+    return new, loss
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def sparse_epoch(params, spec: KGEModel, pos, neg, lr):
+    """One epoch of sparse steps over pre-built (nb, B, 3) batches — the
+    drop-in parity twin of the dense ``trainer._epoch`` (same scan structure,
+    same per-epoch normalization, bit-identical trajectory)."""
+
+    def step(p, sl):
+        bp, bn = sl
+        return sparse_sgd_step(p, spec, bp, bn, lr)
+
+    params, losses = jax.lax.scan(step, params, (pos, neg))
+    return normalize_entities(params), jnp.mean(losses)
+
+
+def _pallas_step(params, spec, pos, neg, lr, *, interpret):
+    """Fused-kernel step for the {ent, rel}-only families."""
+    from repro.kernels.sparse_update import fused_sparse_step
+
+    mode = "dot" if spec.family == "distmult" else (
+        "l2" if spec.norm_ord == 2 else "l1"
+    )
+    b = pos.shape[0]
+    ent, rel, loss = fused_sparse_step(
+        params["ent"], params["rel"], pos, neg, lr,
+        mode=mode, margin=spec.margin, interpret=interpret,
+        unique_e=3 * b, unique_r=b,  # 1:1 corruption shares side + relation
+    )
+    return {"ent": ent, "rel": rel}, loss
+
+
+# ---------------------------------------------------------------------------
+# the multi-epoch device scan
+# ---------------------------------------------------------------------------
+@functools.partial(
+    jax.jit, static_argnames=("spec", "epochs", "batch", "impl", "interpret")
+)
+def _train_scan(
+    params: Dict[str, jnp.ndarray],
+    triples: jnp.ndarray,       # (N_pad, 3) int32, N_pad % batch == 0, cycled
+    key: jax.Array,
+    lr: jnp.ndarray,
+    num_entities: jnp.ndarray,  # traced scalar: true (extended) entity count
+    *,
+    spec: KGEModel,
+    epochs: int,
+    batch: int,
+    impl: str,
+    interpret: bool,
+) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
+    """All epochs × minibatches in one compiled scan → (params, losses)."""
+    n_pad = triples.shape[0]
+    nb = n_pad // batch
+
+    def step(p, sl):
+        bp, bn = sl
+        if impl == "pallas":
+            return _pallas_step(p, spec, bp, bn, lr, interpret=interpret)
+        return sparse_sgd_step(
+            p, spec, bp, bn, lr, unique_e=3 * batch, unique_r=batch
+        )
+
+    def epoch_body(p, ekey):
+        kp, kc, ks = jax.random.split(ekey, 3)
+        perm = jax.random.permutation(kp, n_pad)
+        pos = triples[perm].reshape(nb, batch, 3)
+        # 1:1 corruption against the TRUE entity count (virtual rows included,
+        # bucket-padding rows excluded) — a traced bound, so no retrace.
+        corrupt_head = jax.random.bernoulli(kc, 0.5, (nb, batch))
+        rand_ent = jax.random.randint(
+            ks, (nb, batch), 0, num_entities, dtype=jnp.int32
+        )
+        neg = jnp.stack(
+            [
+                jnp.where(corrupt_head, rand_ent, pos[..., 0]),
+                pos[..., 1],
+                jnp.where(corrupt_head, pos[..., 2], rand_ent),
+            ],
+            axis=-1,
+        )
+        p, losses = jax.lax.scan(step, p, (pos, neg))
+        return normalize_entities(p), jnp.mean(losses)
+
+    return jax.lax.scan(epoch_body, params, jax.random.split(key, epochs))
+
+
+def pad_tables(
+    params: Dict[str, jnp.ndarray], model: KGEModel
+) -> Tuple[Dict[str, jnp.ndarray], int, int]:
+    """Zero-pad entity/relation tables up to bucket multiples.
+
+    Returns (padded params, e_pad, r_pad). Padding rows are inert: no triple
+    references them and the corruption bound keeps them out of negatives;
+    ``normalize_entities`` maps zero rows to zero rows.
+    """
+    e, r = model.num_entities, model.num_relations
+    e_pad, r_pad = bucket(e, ENT_BUCKET), bucket(r, REL_BUCKET)
+    out = {}
+    for k, v in params.items():
+        n = e_pad if k in ENT_KEYS else r_pad
+        if v.shape[0] < n:
+            v = jnp.pad(v, ((0, n - v.shape[0]),) + ((0, 0),) * (v.ndim - 1))
+        out[k] = v
+    return out, e_pad, r_pad
+
+
+def strip_tables(
+    params: Dict[str, jnp.ndarray], model: KGEModel
+) -> Dict[str, jnp.ndarray]:
+    """Drop bucket-padding rows, restoring the logical table shapes."""
+    e, r = model.num_entities, model.num_relations
+    return {k: v[: e if k in ENT_KEYS else r] for k, v in params.items()}
+
+
+def pad_triples(triples: jnp.ndarray, batch: int) -> jnp.ndarray:
+    """Cycle-pad the triple store so the minibatch count is a power of two:
+    every padded row is a real triple, so padded epochs train on a slightly
+    (< 2×) oversampled store instead of on masked garbage, and the pow2
+    batch-count buckets keep consecutive handshakes — whose virtual triples
+    shift the store size by a few hundred rows — on the same traced shape."""
+    n = triples.shape[0]
+    nb = max(1, -(-n // batch))
+    n_pad = (1 << (nb - 1).bit_length()) * batch
+    if n_pad == n:
+        return triples
+    reps = jnp.arange(n_pad - n) % n
+    return jnp.concatenate([triples, triples[reps]])
+
+
+def train_epochs_device(
+    params: Dict[str, jnp.ndarray],
+    model: KGEModel,
+    triples,                    # (N, 3) host or device int32
+    key: jax.Array,
+    *,
+    epochs: int,
+    batch_size: int,
+    lr: float,
+    impl: str,
+    interpret: bool,
+) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
+    """Bucket-pad, run the compiled multi-epoch scan, strip padding.
+
+    Returns (new params with logical shapes, per-epoch mean losses).
+    """
+    tri = jnp.asarray(triples, jnp.int32)
+    b = min(batch_size, tri.shape[0])
+    tri = pad_triples(tri, b)
+    padded, _, _ = pad_tables(params, model)
+    padded, losses = _train_scan(
+        padded, tri, key, jnp.float32(lr),
+        jnp.int32(model.num_entities),
+        spec=shape_spec(model), epochs=epochs, batch=b,
+        impl=impl, interpret=interpret,
+    )
+    return strip_tables(padded, model), losses
+
+
+def train_scan_cache_size() -> int:
+    """Number of compiled specializations of the multi-epoch scan — the
+    retrace-free federation invariant is asserted against this counter."""
+    return _train_scan._cache_size()

@@ -142,10 +142,25 @@ def normalize_entities(params: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]
 # link-prediction query decomposition — the streaming-rank-engine surface
 # ---------------------------------------------------------------------------
 # A family is "decomposable" when score(q, e) factors into a per-query vector
-# against a query-independent entity table: score = −‖q − ent[e]‖ (l1/l2) or
-# q · ent[e] (dot). That is exactly the contract of the Pallas triple_score
-# kernels; TransH/R/D project the *entity* table per relation, so a mixed-
-# relation batch has no shared table and falls back to index expansion.
+# against a query-independent entity table: score = −‖q − ent[e]‖ (l1/l2),
+# q · ent[e] (dot), or the per-component complex modulus distance (cl1, the
+# RotatE metric over [re | im] halves). That is exactly the contract of the
+# Pallas triple_score kernels; TransH/R/D project the *entity* table per
+# relation, so a mixed-relation batch has no shared table and falls back to
+# index expansion.
+#
+# ComplEx factors through the real (E, 2d) table [ent | ent_im]:
+#   tail: s = Σ tre·(hre·rre − him·rim) + tim·(him·rre + hre·rim)
+#   head: s = Σ hre·(rre·tre + rim·tim) + him·(rre·tim − rim·tre)
+# RotatE rotates the query side (rotations are per-component isometries, so
+# ranking heads uses the inverse rotation t∘r̄):
+#   tail: s = −Σ_k |h_k·r_k − t_k|      → q = h∘r,  mode cl1
+#   head: s = −Σ_k |h_k·r_k − t_k|
+#          = −Σ_k |h_k − t_k·r̄_k|       → q = t∘r̄,  mode cl1
+
+
+def _complex_table(params) -> jnp.ndarray:
+    return jnp.concatenate([params["ent"], params["ent_im"]], axis=1)
 
 
 def lp_query_tails(params, m: KGEModel, h: jnp.ndarray, r: jnp.ndarray):
@@ -155,6 +170,19 @@ def lp_query_tails(params, m: KGEModel, h: jnp.ndarray, r: jnp.ndarray):
         return q, params["ent"], ("l2" if m.norm_ord == 2 else "l1")
     if m.family == "distmult":
         return params["ent"][h] * params["rel"][r], params["ent"], "dot"
+    if m.family == "complex":
+        hre, him = params["ent"][h], params["ent_im"][h]
+        rre, rim = params["rel"][r], params["rel_im"][r]
+        q = jnp.concatenate([hre * rre - him * rim, him * rre + hre * rim], 1)
+        return q, _complex_table(params), "dot"
+    if m.family == "rotate":
+        he = params["ent"][h]
+        d2 = he.shape[-1] // 2
+        hr, hi = he[..., :d2], he[..., d2:]
+        ph = params["rel"][r]
+        cr, ci = jnp.cos(ph), jnp.sin(ph)
+        q = jnp.concatenate([hr * cr - hi * ci, hr * ci + hi * cr], 1)
+        return q, params["ent"], "cl1"
     return None
 
 
@@ -165,6 +193,19 @@ def lp_query_heads(params, m: KGEModel, r: jnp.ndarray, t: jnp.ndarray):
         return q, params["ent"], ("l2" if m.norm_ord == 2 else "l1")
     if m.family == "distmult":
         return params["rel"][r] * params["ent"][t], params["ent"], "dot"
+    if m.family == "complex":
+        tre, tim = params["ent"][t], params["ent_im"][t]
+        rre, rim = params["rel"][r], params["rel_im"][r]
+        q = jnp.concatenate([rre * tre + rim * tim, rre * tim - rim * tre], 1)
+        return q, _complex_table(params), "dot"
+    if m.family == "rotate":
+        te = params["ent"][t]
+        d2 = te.shape[-1] // 2
+        tr, ti = te[..., :d2], te[..., d2:]
+        ph = params["rel"][r]
+        cr, ci = jnp.cos(ph), jnp.sin(ph)  # conj rotation: t ∘ r̄
+        q = jnp.concatenate([tr * cr + ti * ci, ti * cr - tr * ci], 1)
+        return q, params["ent"], "cl1"
     return None
 
 
@@ -179,6 +220,10 @@ def lp_gold_scores(q: jnp.ndarray, ent: jnp.ndarray, idx: jnp.ndarray, mode: str
     if mode == "l2":
         d2 = jnp.sum(q * q, -1) - 2.0 * jnp.sum(q * e, -1) + jnp.sum(e * e, -1)
         return -jnp.sqrt(jnp.maximum(d2, 0.0) + 1e-12)
+    if mode == "cl1":
+        half = q.shape[-1] // 2
+        dr, di = q[:, :half] - e[:, :half], q[:, half:] - e[:, half:]
+        return -jnp.sum(jnp.sqrt(dr * dr + di * di + 1e-12), axis=-1)
     return -jnp.sum(jnp.abs(q - e), axis=-1)
 
 
@@ -193,6 +238,23 @@ def _use_score_kernel(via_kernel: bool | None) -> bool:
     return jax.default_backend() in COMPILED_BACKENDS
 
 
+def _decomposed_scores(q, table, mode: str, m: KGEModel, via_kernel):
+    """(B, d) query × (E, d) table → (B, E) through the tile kernel on
+    compiled backends, or the numerically-identical jnp broadcast on CPU."""
+    if _use_score_kernel(via_kernel):
+        from repro.kernels.triple_score import pairwise_scores
+
+        return pairwise_scores(q, table, mode=mode)
+    if mode == "dot":
+        return q @ table.T
+    if mode == "cl1":
+        half = q.shape[-1] // 2
+        dr = q[:, None, :half] - table[None, :, :half]
+        di = q[:, None, half:] - table[None, :, half:]
+        return -jnp.sum(jnp.sqrt(dr * dr + di * di + 1e-12), axis=-1)
+    return -_norm(q[:, None, :] - table[None], m.norm_ord)
+
+
 def score_all_tails(
     params, m: KGEModel, h: jnp.ndarray, r: jnp.ndarray,
     *, via_kernel: bool | None = None,
@@ -204,13 +266,7 @@ def score_all_tails(
     qd = lp_query_tails(params, m, h, r)
     if qd is not None:
         q, table, mode = qd
-        if _use_score_kernel(via_kernel):
-            from repro.kernels.triple_score import pairwise_scores
-
-            return pairwise_scores(q, table, mode=mode)
-        if mode == "dot":
-            return q @ table.T
-        return -_norm(q[:, None, :] - table[None], m.norm_ord)
+        return _decomposed_scores(q, table, mode, m, via_kernel)
     # generic fallback: score against every entity by index expansion
     b = h.shape[0]
     t_all = jnp.arange(e)
@@ -227,13 +283,7 @@ def score_all_heads(
     qd = lp_query_heads(params, m, r, t)
     if qd is not None:
         q, table, mode = qd
-        if _use_score_kernel(via_kernel):
-            from repro.kernels.triple_score import pairwise_scores
-
-            return pairwise_scores(q, table, mode=mode)
-        if mode == "dot":
-            return q @ table.T
-        return -_norm(q[:, None, :] - table[None], m.norm_ord)
+        return _decomposed_scores(q, table, mode, m, via_kernel)
     b = t.shape[0]
     e = m.num_entities
     h_all = jnp.arange(e)

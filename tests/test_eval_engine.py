@@ -46,7 +46,7 @@ def _trained(kg, family="transe", norm_ord=1, epochs=3, dim=24):
 
 
 # ------------------------------------------------------- kernel vs ref oracle
-@pytest.mark.parametrize("mode", ["l1", "l2", "dot"])
+@pytest.mark.parametrize("mode", ["l1", "l2", "dot", "cl1"])
 @pytest.mark.parametrize("impl", ["pallas", "xla"])
 @pytest.mark.parametrize(
     "b,e,d,block_e", [(8, 256, 32, 64), (13, 300, 48, 128), (5, 97, 16, 32)]
@@ -71,7 +71,7 @@ def test_fused_ranks_matches_ref(b, e, d, block_e, impl, mode):
     np.testing.assert_array_equal(out, ref)
 
 
-@pytest.mark.parametrize("mode", ["l1", "l2", "dot"])
+@pytest.mark.parametrize("mode", ["l1", "l2", "dot", "cl1"])
 def test_pairwise_scores_dot_and_minkowski(mode):
     q = jax.random.normal(jax.random.PRNGKey(0), (9, 40))
     ent = jax.random.normal(jax.random.PRNGKey(1), (130, 40))
@@ -83,7 +83,17 @@ def test_pairwise_scores_dot_and_minkowski(mode):
 # ------------------------------------------------------- end-to-end parity
 @pytest.mark.parametrize("filtered", [True, False])
 @pytest.mark.parametrize(
-    "family,norm_ord", [("transe", 1), ("transe", 2), ("distmult", 1)]
+    "family,norm_ord",
+    [
+        ("transe", 1),
+        ("transe", 2),
+        ("distmult", 1),
+        # ComplEx/RotatE route through the dot / cl1 decompositions (ROADMAP
+        # follow-up from PR 1) — they must hit the fused engine, not the
+        # generic score_triples fallback, and still match the seed ranking
+        ("complex", 1),
+        ("rotate", 1),
+    ],
 )
 def test_link_prediction_engine_parity(tiny_kg, family, norm_ord, filtered):
     """Engine metrics == seed reference metrics, bit-identical, on a fixed-seed
@@ -201,10 +211,13 @@ def test_trainer_corrupts_against_extended_entities(tiny_kg, monkeypatch):
         return real(rng, triples, num_entities)
 
     monkeypatch.setattr(data_mod, "corrupt_triples", spy)
-    tr.train_epochs(1)
+    # impl="reference" pins the host numpy-sampling path this spy observes;
+    # the device engine's equivalent (traced corruption bound = extended
+    # count, bucket-padding rows excluded) is covered in test_train_engine.
+    tr.train_epochs(1, impl="reference")
     assert seen["num_entities"] == e0 + 5  # extended count, not kg.num_entities
     tr.strip_virtual()
-    tr.train_epochs(1)
+    tr.train_epochs(1, impl="reference")
     assert seen["num_entities"] == e0
 
 
