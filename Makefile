@@ -1,14 +1,15 @@
 PY := PYTHONPATH=src python
 
-.PHONY: tier1 test bench-eval bench-train bench
+.PHONY: tier1 test bench-eval bench-train bench-tick bench bench-json
 
 # CI gate: the full suite, then the engine parity tests explicitly (they are
-# the acceptance bars for the streaming fused-rank eval engine and the
-# device-resident training engine).
+# the acceptance bars for the streaming fused-rank eval engine, the
+# device-resident training engine, and the batched federation tick engine).
 tier1:
 	$(PY) -m pytest -x -q
 	$(PY) -m pytest -q tests/test_eval_engine.py -k "parity"
 	$(PY) -m pytest -q tests/test_train_engine.py -k "parity or retrace"
+	$(PY) -m pytest -q tests/test_tick_engine.py -k "parity or reused"
 
 test:
 	$(PY) -m pytest -q
@@ -21,5 +22,13 @@ bench-eval:
 bench-train:
 	PYTHONPATH=src:. python benchmarks/bench_train_engine.py --csv benchmarks/train_engine.csv
 
+# serial reference tick vs batched tick engine at 8 owners, E=10k each
+bench-tick:
+	PYTHONPATH=src:. python benchmarks/bench_federation_tick.py --csv benchmarks/federation_tick.csv
+
 bench:
 	PYTHONPATH=src:. python benchmarks/run.py
+
+# same, plus machine-readable BENCH_<suite>.json artifacts in benchmarks/
+bench-json:
+	PYTHONPATH=src:. python benchmarks/run.py --json

@@ -1,0 +1,145 @@
+"""Batched federation tick engine vs the serial reference tick.
+
+Builds an all-pairs-aligned federation of ``--owners`` KGs (E = 10k entities
+each by default), trains them locally, then drives two schedulers from the
+same seed — one with ``tick_impl="reference"`` (the serial per-owner loop),
+one with ``tick_impl="batched"`` (one compiled program per tick) — through
+identical tick sequences.
+
+Parity is asserted in-bench before any number is reported: both schedulers
+must produce the same accept/reject decisions, the same backtrack scores and
+ε history, and bit-identical final embeddings (the engine's contract; also
+pinned in tier-1 by ``tests/test_tick_engine.py``).
+
+Timing: warm-up ticks run first until the batched program cache stops
+growing (compiles stay out of the timed region — steady-state federation
+reuses the cached per-signature programs), then ``--ticks`` matched ticks
+are timed for each impl. Emits ``tick_engine.{reference|batched}.tick``
+µs-per-tick rows plus the speedup. The acceptance bar for this engine is
+≥ 3× at 8 owners on CPU CI. ``--csv <path>`` appends the rows to a file.
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.federation import FederationScheduler
+from repro.core.ppat import PPATConfig
+from repro.core.tick_engine import tick_program_cache_size
+from repro.kge.data import synthesize_universe
+
+
+def _build_universe(owners: int, entities: int, triples: int, aligned: int):
+    names = [f"K{i}" for i in range(owners)]
+    scale = 1 / 400
+    stats = [(n, 8, int(entities / scale), int(triples / scale)) for n in names]
+    aligns = [
+        (names[i], names[j], int(aligned / scale))
+        for i in range(owners)
+        for j in range(i + 1, owners)
+    ]
+    return synthesize_universe(
+        seed=0, scale=scale, kg_stats=stats, alignments=aligns,
+        density_boost=2.0,
+    )
+
+
+def _make(kgs, args):
+    return FederationScheduler(
+        kgs, dim=args.dim, ppat_cfg=PPATConfig(steps=args.ppat_steps, seed=0),
+        local_epochs=args.local_epochs, update_epochs=args.update_epochs,
+        seed=0, score_metric=args.metric, score_max_test=args.max_test,
+        batch_size=args.batch,
+    )
+
+
+def _assert_parity(ref, bat) -> None:
+    assert len(ref.events) == len(bat.events)
+    for r, b in zip(ref.events, bat.events):
+        assert (r.tick, r.host, r.client, r.kind, r.accepted) == (
+            b.tick, b.host, b.client, b.kind, b.accepted
+        ), (r, b)
+        assert r.score_before == b.score_before and r.score_after == b.score_after, (r, b)
+        assert (math.isnan(r.epsilon) and math.isnan(b.epsilon)) or (
+            r.epsilon == b.epsilon
+        ), (r, b)
+    assert ref.best_score == bat.best_score
+    for n in ref.trainers:
+        for k in ref.trainers[n].params:
+            assert np.array_equal(
+                np.asarray(ref.trainers[n].params[k]),
+                np.asarray(bat.trainers[n].params[k]),
+            ), f"{n}.{k} diverged between tick impls"
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv", default=None, help="also append rows to this file")
+    ap.add_argument("--owners", type=int, default=8)
+    ap.add_argument("--entities", type=int, default=10_000)
+    ap.add_argument("--triples", type=int, default=2_000)
+    ap.add_argument("--aligned", type=int, default=700)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--ppat-steps", type=int, default=60)
+    ap.add_argument("--local-epochs", type=int, default=2)
+    ap.add_argument("--update-epochs", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--metric", default="hit10", choices=["hit10", "accuracy"])
+    ap.add_argument("--max-test", type=int, default=48)
+    ap.add_argument("--warm-ticks", type=int, default=4)
+    ap.add_argument("--ticks", type=int, default=2, help="timed ticks per impl")
+    args = ap.parse_args(argv)
+
+    kgs = _build_universe(args.owners, args.entities, args.triples, args.aligned)
+
+    feds = {}
+    for impl in ("reference", "batched"):
+        feds[impl] = _make(kgs, args)
+        feds[impl].initial_training()
+
+    # warm-up: compile every program both impls will use; stop early once the
+    # batched tick-program cache stops growing (signature set is saturated)
+    progs = -1
+    for w in range(args.warm_ticks):
+        for impl in ("reference", "batched"):
+            feds[impl].run(max_ticks=1, tick_impl=impl)
+        _assert_parity(feds["reference"], feds["batched"])
+        if tick_program_cache_size() == progs and w >= 1:
+            break
+        progs = tick_program_cache_size()
+
+    timed = {"reference": 0.0, "batched": 0.0}
+    for _ in range(args.ticks):
+        for impl in ("reference", "batched"):
+            t0 = time.time()
+            feds[impl].run(max_ticks=1, tick_impl=impl)
+            timed[impl] += time.time() - t0
+        _assert_parity(feds["reference"], feds["batched"])
+
+    us_ref = timed["reference"] * 1e6 / args.ticks
+    us_bat = timed["batched"] * 1e6 / args.ticks
+    speedup = us_ref / us_bat
+    rows = [
+        (f"tick_engine.reference.N{args.owners}.E{args.entities}", us_ref,
+         "serial per-owner tick loop"),
+        (f"tick_engine.batched.N{args.owners}.E{args.entities}", us_bat,
+         "one compiled program per tick"),
+        # value = the ratio itself (dimensionless), so BENCH_*.json artifacts
+        # track the speedup directly and the ≥3× bar is machine-checkable
+        (f"tick_engine.speedup.N{args.owners}.E{args.entities}", speedup,
+         f"speedup={speedup:.1f}x parity=bitwise"),
+    ]
+    for name, us, derived in rows:
+        emit(name, us, derived)
+    if args.csv:
+        with open(args.csv, "a") as f:
+            for name, us, derived in rows:
+                f.write(f"{name},{us:.1f},{derived}\n")
+
+
+if __name__ == "__main__":
+    main()

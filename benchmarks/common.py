@@ -1,16 +1,39 @@
 """Shared benchmark utilities: CSV emission + scaled-universe builders."""
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
+from typing import Dict
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+#: every ``emit`` call also lands here, so harnesses (``run.py --json``) can
+#: dump machine-readable ``BENCH_*.json`` files per suite
+RECORDED: Dict[str, float] = {}
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     """The harness contract: ``name,us_per_call,derived`` CSV rows."""
+    RECORDED[name] = float(us_per_call)
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def drain_recorded() -> Dict[str, float]:
+    """Return and clear the rows emitted since the last drain."""
+    out = dict(RECORDED)
+    RECORDED.clear()
+    return out
+
+
+def write_bench_json(suite: str, rows: Dict[str, float], out_dir: str) -> str:
+    """Write ``BENCH_<suite>.json`` mapping row name → µs/call."""
+    path = os.path.join(out_dir, f"BENCH_{suite}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def timed(fn, *args, repeats: int = 1, **kw):

@@ -1,10 +1,14 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. ``--only <prefix>`` filters.
+``--json [dir]`` additionally writes one machine-readable
+``BENCH_<suite>.json`` file per suite (name → µs/call), so the perf
+trajectory can be tracked across PRs by diffing committed artifacts.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
@@ -13,6 +17,7 @@ from benchmarks import (
     bench_aggregation,
     bench_alignment_scale,
     bench_eval_engine,
+    bench_federation_tick,
     bench_kernels,
     bench_link_prediction,
     bench_noise_ablation,
@@ -22,6 +27,7 @@ from benchmarks import (
     bench_train_engine,
     bench_triple_classification,
 )
+from benchmarks.common import drain_recorded, write_bench_json
 
 SUITES = [
     ("privacy", bench_privacy.main),             # §4.1.2 (ε̂ = 2.73)
@@ -32,6 +38,7 @@ SUITES = [
     ("link_prediction", bench_link_prediction.main),              # Tab. 4
     ("eval_engine", lambda: bench_eval_engine.main([])),          # fused ranks
     ("train_engine", lambda: bench_train_engine.main([])),        # sparse scan
+    ("federation_tick", lambda: bench_federation_tick.main([])),  # tick engine
     ("noise_ablation", bench_noise_ablation.main),                # Tab. 5
     ("alignment_scale", bench_alignment_scale.main),              # Tab. 6
     ("aggregation", bench_aggregation.main),                      # Tab. 7
@@ -41,6 +48,11 @@ SUITES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--json", nargs="?", const=os.path.dirname(__file__) or ".",
+        default=None, metavar="DIR",
+        help="write BENCH_<suite>.json per suite (default: benchmarks/)",
+    )
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -49,12 +61,24 @@ def main() -> None:
         if args.only and not name.startswith(args.only):
             continue
         t0 = time.time()
+        drain_recorded()
+        suite_ok = True
         try:
             fn()
         except Exception:
+            suite_ok = False
             failures += 1
             traceback.print_exc()
             print(f"{name}.FAILED,0.0,exception")
+        if args.json is not None:
+            rows = drain_recorded()
+            if not suite_ok:
+                # partial rows must not read as a clean (regressed) run when
+                # artifacts are diffed across PRs — mark the failure
+                rows[f"{name}.FAILED"] = 0.0
+            if rows:
+                path = write_bench_json(name, rows, args.json)
+                print(f"# wrote {path}", file=sys.stderr)
         print(f"# suite {name} done in {time.time()-t0:.0f}s", file=sys.stderr)
     if failures:
         sys.exit(1)

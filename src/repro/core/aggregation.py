@@ -78,6 +78,44 @@ def neighbor_structure(
     return neigh, rels, rows
 
 
+def virtual_structure(
+    client_kg,
+    aligned_client: np.ndarray,
+    aligned_host: np.ndarray,
+    e0: int,
+    r0: int,
+    *,
+    max_neighbors: int = 2000,
+) -> Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+    """The id-space part of a virtual extension: neighbor entity ids, joining
+    relation ids (client-local), and the adjacency triples remapped into the
+    host id space, where virtual rows occupy ids ``e0..``/``r0..``.
+
+    Deterministic in (client_kg.train, aligned sets, host table sizes), all
+    of which are immutable between ticks — so callers (the federation tick
+    engine) may compute it once per (client, host) pair and reuse it, while
+    ``virtual_extension`` recomputes per handshake.
+    """
+    neigh, rels, rows = neighbor_structure(
+        client_kg, aligned_client, max_neighbors=max_neighbors
+    )
+    if len(rows) == 0:
+        return None
+    ent_map = {int(e): e0 + i for i, e in enumerate(neigh)}
+    rel_map = {int(r): r0 + i for i, r in enumerate(rels)}
+    align_map = {int(c): int(h) for c, h in zip(aligned_client, aligned_host)}
+
+    extra = []
+    for n, r, a, direction in rows:
+        host_a = align_map[int(a)]
+        vn, vr = ent_map[int(n)], rel_map[int(r)]
+        if direction == 0:  # (neighbor) -r-> (aligned)
+            extra.append((vn, vr, host_a))
+        else:  # (aligned) -r-> (neighbor)
+            extra.append((host_a, vr, vn))
+    return neigh, rels, np.asarray(extra, np.int64)
+
+
 def virtual_extension(
     host_trainer,
     client_trainer,
@@ -91,28 +129,16 @@ def virtual_extension(
     ``generate_fn`` is the client's DP generator (embeddings → host space);
     only G(N(X)) crosses the boundary, never raw client embeddings.
     """
-    neigh, rels, rows = neighbor_structure(client_kg, aligned_client)
-    if len(rows) == 0:
+    vs = virtual_structure(
+        client_kg, aligned_client, aligned_host,
+        host_trainer.model.num_entities, host_trainer.model.num_relations,
+    )
+    if vs is None:
         return None
+    neigh, rels, extra = vs
     # translated (DP) embeddings of the neighbors and joining relations
     v_ent = np.asarray(generate_fn(client_trainer.get_entity_embeddings(neigh)))
     v_rel = np.asarray(generate_fn(client_trainer.get_relation_embeddings(rels)))
-
-    e0 = host_trainer.model.num_entities
-    r0 = host_trainer.model.num_relations
-    ent_map = {int(e): e0 + i for i, e in enumerate(neigh)}
-    rel_map = {int(r): r0 + i for i, r in enumerate(rels)}
-    align_map = {int(c): int(h) for c, h in zip(aligned_client, aligned_host)}
-
-    extra = []
-    for n, r, a, direction in rows:
-        host_a = align_map[int(a)]
-        vn, vr = ent_map[int(n)], rel_map[int(r)]
-        if direction == 0:  # (neighbor) -r-> (aligned)
-            extra.append((vn, vr, host_a))
-        else:  # (aligned) -r-> (neighbor)
-            extra.append((host_a, vr, vn))
-    extra = np.asarray(extra, np.int64)
 
     host_trainer.extend_tables(jnp.asarray(v_ent), jnp.asarray(v_rel), extra)
     return VirtualExtension(len(neigh), len(rels), extra)

@@ -12,9 +12,22 @@ Implements the handshake protocol faithfully as a host-side scheduler:
     shared aligned entities (Alg. 1 l. 30).
 
 The paper's wall-clock asynchrony (OS processes sleeping/waking) is modeled
-as scheduler ticks: each tick serves every Ready owner once. This preserves
-the protocol semantics (pairing, queueing, backtracking, broadcast-wakeup)
-without real multi-process execution — see DESIGN.md §3.
+as scheduler ticks. Each tick is *planned* at tick start: every Ready owner
+contributes one plan entry — a handshake for the front of its offer queue,
+or a self-train — and client embeddings are read as of the tick-start
+snapshot (a tick-consistent view: mid-tick broadcasts and accepts take
+effect from the NEXT tick). The plan then executes through one of two
+engines (``kernels.dispatch.resolve_tick_impl`` / ``REPRO_TICK_IMPL``):
+
+  * ``batched`` (default) — ``core.tick_engine`` compiles the whole tick
+    into ONE device program of independent per-owner subgraphs (PPAT,
+    aggregation, retrain, backtrack scoring), bit-identical to the serial
+    order-independent case with the same per-pair keys;
+  * ``reference`` — the serial per-owner loop below, kept as the parity
+    oracle.
+
+This preserves the protocol semantics (pairing, queueing, backtracking,
+broadcast-wakeup) without real multi-process execution — see DESIGN.md §3.
 """
 from __future__ import annotations
 
@@ -31,6 +44,7 @@ import numpy as np
 from repro.core.aggregation import kgemb_update, virtual_extension
 from repro.core.alignment import AlignmentRegistry
 from repro.core.ppat import PPATConfig, train_ppat
+from repro.kernels.dispatch import resolve_tick_impl
 from repro.kge.eval import triple_classification_accuracy
 from repro.kge.trainer import KGETrainer
 
@@ -43,6 +57,11 @@ class NodeState(enum.Enum):
 
 @dataclass
 class FederationEvent:
+    """One protocol action. ``seconds`` measures *executed* work (stage
+    outputs are blocked on before reading the clock); entries of a batched
+    tick ran inside one fused device program, so they all report that
+    program's wall-clock."""
+
     tick: int
     host: str
     client: Optional[str]
@@ -52,6 +71,33 @@ class FederationEvent:
     accepted: bool
     epsilon: float = float("nan")
     seconds: float = 0.0
+
+
+@dataclass
+class TickEntry:
+    """One planned unit of tick work. ``client_view`` freezes the client's
+    params at plan time so both tick engines read the same tick-consistent
+    state regardless of execution order."""
+
+    host: str
+    kind: str  # "ppat" | "self-train"
+    client: Optional[str] = None
+    client_view: Optional[Dict[str, jnp.ndarray]] = None
+
+
+class _ClientView:
+    """Read-only embedding access over a plan-time params snapshot, with the
+    trainer surface ``virtual_extension`` expects."""
+
+    def __init__(self, params: Dict[str, jnp.ndarray], model):
+        self.params = params
+        self.model = model
+
+    def get_entity_embeddings(self, idx) -> jnp.ndarray:
+        return self.params["ent"][jnp.asarray(idx)]
+
+    def get_relation_embeddings(self, idx) -> jnp.ndarray:
+        return self.params["rel"][jnp.asarray(idx)]
 
 
 class FederationScheduler:
@@ -74,6 +120,8 @@ class FederationScheduler:
         score_max_test: int = 200,
         seed: int = 0,
         margin: float = 2.0,
+        batch_size: int = 100,
+        tick_impl: Optional[str] = None,
     ):
         # score_split="test" reproduces Alg. 1 verbatim (the paper backtracks
         # on g_j.test); "valid" (default) is the leakage-free variant.
@@ -83,14 +131,21 @@ class FederationScheduler:
         self.score_split = score_split
         self.score_metric = score_metric
         self.score_max_test = score_max_test
+        self.tick_impl = tick_impl
         self.kgs = kgs
         self.registry = registry or AlignmentRegistry.from_kgs(kgs)
         families = families or {n: "transe" for n in kgs}
         self.trainers: Dict[str, KGETrainer] = {
-            n: KGETrainer(kg, families[n], dim=dim, seed=seed + i, margin=margin)
+            n: KGETrainer(kg, families[n], dim=dim, seed=seed + i, margin=margin,
+                          batch_size=batch_size)
             for i, (n, kg) in enumerate(kgs.items())
         }
         self.ppat_cfg = ppat_cfg or PPATConfig(seed=seed)
+        if aggregation not in ("average", "replace"):
+            # validate up front: both tick engines bake the mode into their
+            # handshake math, and only the serial path would otherwise reach
+            # kgemb_update's own check
+            raise ValueError(f"unknown aggregation mode {aggregation!r}")
         self.aggregation = aggregation
         self.procrustes_refine = procrustes_refine
         self.use_virtual = use_virtual
@@ -111,18 +166,51 @@ class FederationScheduler:
         self.epsilons: List[float] = []
         self._tick = 0
         self._key = jax.random.PRNGKey(seed + 101)
+        # backtrack-scoring inputs are built from the immutable kg splits —
+        # cache them per owner instead of regenerating fixed negatives /
+        # rebuilding CSR filters on every score call (the floating filter
+        # width also retraced the rank kernels every tick)
+        self._acc_inputs: Dict[str, tuple] = {}
+        self._lp_inputs: Dict[str, tuple] = {}
+        from repro.core.tick_engine import TickEngine
+
+        self._tick_engine = TickEngine(self)
 
     # ------------------------------------------------------------ scoring
+    def _accuracy_inputs(self, name: str) -> tuple:
+        """(valid, fixed 1:1 negatives) for the accuracy backtrack metric —
+        built once per owner (kg splits are immutable)."""
+        cached = self._acc_inputs.get(name)
+        if cached is None:
+            from repro.kge.data import corrupt_triples
+
+            kg = self.kgs[name]
+            rng = np.random.default_rng(0)  # fixed negatives → comparable
+            va = kg.test if self.score_split == "test" else kg.valid
+            cached = (va, corrupt_triples(rng, va, kg.num_entities))
+            self._acc_inputs[name] = cached
+        return cached
+
+    def _hit10_inputs(self, name: str) -> tuple:
+        """(test, filt_t, filt_h) for the hit@10 backtrack metric — CSR
+        filters are a Python pass over every triple, built once per owner."""
+        cached = self._lp_inputs.get(name)
+        if cached is None:
+            from repro.kge.eval import build_score_inputs
+
+            split = "test" if self.score_split == "test" else "valid"
+            cached = build_score_inputs(
+                self.kgs[name], split=split, max_test=self.score_max_test
+            )
+            self._lp_inputs[name] = cached
+        return cached
+
     def _valid_accuracy(self, name: str) -> float:
         tr = self.trainers[name]
-        kg = self.kgs[name]
-        rng = np.random.default_rng(0)  # fixed negatives → comparable scores
-        from repro.kge.data import corrupt_triples
         from repro.kge.eval import best_threshold_accuracy
         from repro.kge.models import score_triples
 
-        va = kg.test if self.score_split == "test" else kg.valid
-        va_neg = corrupt_triples(rng, va, kg.num_entities)
+        va, va_neg = self._accuracy_inputs(name)
 
         def s(t):
             t = jnp.asarray(t)
@@ -144,6 +232,7 @@ class FederationScheduler:
         lp = link_prediction(
             tr.params, tr.model, self.kgs[name],
             split=split, max_test=self.score_max_test,
+            precomputed=self._hit10_inputs(name),
         )
         return lp["hit@10"]
 
@@ -179,40 +268,63 @@ class FederationScheduler:
         self._queued[name].discard(client)
         return client
 
-    def federate_once(self, host: str, client: str) -> FederationEvent:
-        """ActiveHandshake + KGEmb-Update + Backtrack for one (client, host)."""
+    def federate_once(
+        self,
+        host: str,
+        client: str,
+        *,
+        client_view: Optional[Dict[str, jnp.ndarray]] = None,
+    ) -> FederationEvent:
+        """ActiveHandshake + KGEmb-Update + Backtrack for one (client, host).
+
+        ``client_view`` optionally freezes the client's params (the planner
+        passes the tick-start snapshot so serial and batched ticks read the
+        same state); by default the client's live params are used.
+        """
         t0 = time.time()
         self.state[host] = NodeState.BUSY
         ent = self.registry.entities(client, host)
         rel = self.registry.relations(client, host)
-        cli_tr, hos_tr = self.trainers[client], self.trainers[host]
+        hos_tr = self.trainers[host]
+        cli = _ClientView(
+            client_view or dict(self.trainers[client].params),
+            self.trainers[client].model,
+        )
 
         idx_c, idx_h = ent
-        x = cli_tr.get_entity_embeddings(idx_c)
+        x = cli.get_entity_embeddings(idx_c)
         y = hos_tr.get_entity_embeddings(idx_h)
         if rel is not None and len(rel[0]):
-            x = jnp.concatenate([x, cli_tr.get_relation_embeddings(rel[0])])
+            x = jnp.concatenate([x, cli.get_relation_embeddings(rel[0])])
             y = jnp.concatenate([y, hos_tr.get_relation_embeddings(rel[1])])
 
         self._key, sub = jax.random.split(self._key)
         ppat_client, ppat_host, hist = train_ppat(x, y, self.ppat_cfg, key=sub)
         self.epsilons.append(hist["epsilon"])
 
-        # DP-synthesized embeddings for the aligned set, host side
-        synth = ppat_client.generate(x)
+        # DP-synthesized embeddings for the aligned set, host side. Generate
+        # and refine on the PPAT_BUCKET-padded aligned set (zero rows beyond
+        # the true count): zero rows map to zero synth rows and contribute
+        # exact zeros to the procrustes contraction, and the bucketed shape
+        # is what lets the batched tick engine reuse one compiled program
+        # across handshake pairs with slightly different alignment sizes.
+        from repro.core.ppat import PPAT_BUCKET, _pad_rows
+
+        n_true = x.shape[0]
+        synth = ppat_client.generate(_pad_rows(x, PPAT_BUCKET))
         refine = None
         if self.procrustes_refine:
             # host-local MUSE refinement: post-processing of the DP release
             # with host-private Y — does not change the (ε, δ) guarantee.
             from repro.core.alignment import procrustes
 
-            refine = procrustes(synth, y)
+            refine = procrustes(synth, _pad_rows(y, PPAT_BUCKET))
             synth = synth @ refine
         n_ent = len(idx_c)
         kgemb_update(hos_tr, idx_h, synth[:n_ent], mode=self.aggregation)
         if rel is not None and len(rel[0]):
             cur = hos_tr.get_relation_embeddings(rel[1])
-            new = synth[n_ent:]
+            new = synth[n_ent:n_true]
             if self.aggregation == "average":
                 new = 0.5 * (cur + new)
             hos_tr.set_relation_embeddings(rel[1], new)
@@ -225,7 +337,7 @@ class FederationScheduler:
                 else (lambda e: ppat_client.generate(e) @ refine)
             )
             ve = virtual_extension(
-                hos_tr, cli_tr, self.kgs[client], idx_c, idx_h, gen
+                hos_tr, cli, self.kgs[client], idx_c, idx_h, gen
             )
         hos_tr.train_epochs(self.update_epochs)  # KGEmb-Update retrain
         if ve is not None:
@@ -240,6 +352,7 @@ class FederationScheduler:
         else:
             hos_tr.restore(self.best_snapshot[host])
         self.state[host] = NodeState.READY
+        jax.block_until_ready(hos_tr.params)  # time executed work, not enqueue
         ev = FederationEvent(
             self._tick, host, client, "ppat", before, after, accepted,
             epsilon=hist["epsilon"], seconds=time.time() - t0,
@@ -263,6 +376,7 @@ class FederationScheduler:
             self.broadcast(name)
         else:
             tr.restore(self.best_snapshot[name])
+        jax.block_until_ready(tr.params)  # time executed work, not enqueue
         ev = FederationEvent(
             self._tick, name, None, "self-train", before, after, accepted,
             seconds=time.time() - t0,
@@ -271,24 +385,71 @@ class FederationScheduler:
         return ev
 
     # -------------------------------------------------------------- loop
-    def run(self, max_ticks: int = 6, *, self_train: bool = True) -> Dict[str, float]:
+    def plan_tick(self, *, self_train: bool = True) -> List[TickEntry]:
+        """Snapshot this tick's work from the current protocol state: every
+        Ready owner contributes one entry (front-of-queue handshake, else
+        self-train), owners with nothing to do go to Sleep. Offers are popped
+        and client views frozen NOW — broadcasts emitted while the tick
+        executes only affect later ticks, which is what makes the plan a
+        fixed unit of device work for the batched engine."""
+        entries: List[TickEntry] = []
+        for name in self.trainers:
+            if self.state[name] is not NodeState.READY:
+                continue
+            if self.queue[name]:
+                client = self._pop_offer(name)
+                entries.append(TickEntry(
+                    name, "ppat", client,
+                    client_view=dict(self.trainers[client].params),
+                ))
+            elif self_train:
+                entries.append(TickEntry(name, "self-train"))
+            else:
+                self.state[name] = NodeState.SLEEP
+        return entries
+
+    def run(
+        self,
+        max_ticks: int = 6,
+        *,
+        self_train: bool = True,
+        tick_impl: Optional[str] = None,
+    ) -> Dict[str, float]:
         """Scheduler ticks until quiescence (all queues empty, no improvement)
-        or ``max_ticks``. Each tick serves every Ready owner once."""
+        or ``max_ticks``. Each tick serves every Ready owner once, per the
+        tick-start plan. ``tick_impl`` ("batched" | "reference") overrides
+        the constructor/env-resolved engine for this run."""
+        impl = resolve_tick_impl(
+            tick_impl if tick_impl is not None else self.tick_impl
+        )
+        if impl == "batched":
+            # validate BEFORE any plan pops offers: the host-loop dense
+            # training step cannot be embedded in a tick program, and
+            # failing mid-plan would drop queued handshakes
+            from repro.kernels.dispatch import resolve_train_impl
+
+            for tr in self.trainers.values():
+                if resolve_train_impl(None, tr.model.family) == "reference":
+                    raise ValueError(
+                        "tick_impl='batched' cannot embed the 'reference' "
+                        "training step (REPRO_TRAIN_IMPL=reference); run "
+                        "with tick_impl='reference' instead"
+                    )
         for _ in range(max_ticks):
             self._tick += 1
-            any_progress = False
-            for name in self.trainers:
-                if self.state[name] is not NodeState.READY:
-                    continue
-                if self.queue[name]:
-                    client = self._pop_offer(name)
-                    ev = self.federate_once(name, client)
-                    any_progress = any_progress or ev.accepted
-                elif self_train:
-                    ev = self.self_train_once(name)
-                    any_progress = any_progress or ev.accepted
-                else:
-                    self.state[name] = NodeState.SLEEP
+            plan = self.plan_tick(self_train=self_train)
+            if impl == "batched" and plan:
+                events = self._tick_engine.execute(plan, self._tick)
+            else:
+                events = [
+                    self.federate_once(
+                        e.host, e.client, client_view=e.client_view
+                    )
+                    if e.kind == "ppat"
+                    else self.self_train_once(e.host)
+                    for e in plan
+                ]
+            any_progress = any(ev.accepted for ev in events)
             if not any_progress and all(not q for q in self.queue.values()):
                 break  # "whole training continues until no more improvement"
         return dict(self.best_score)

@@ -161,8 +161,23 @@ def _generator_update(w, vel, xb, grad_adv, cfg: PPATConfig):
 
 
 # ------------------------------------------------------- fused device loop
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _ppat_scan(
+def _init_host_params(key: jax.Array, dim: int, cfg: PPATConfig) -> dict:
+    """Teachers + student (+ momentum state) — the PPATHost init as a pure
+    graph, shared by the object API and the fused/batched entry graphs."""
+    kt, ks = jax.random.split(key)
+    teachers = jax.vmap(lambda k: _init_disc(k, dim, cfg.hidden))(
+        jax.random.split(kt, cfg.num_teachers)
+    )
+    student = _init_disc(ks, dim, cfg.hidden)
+    return {
+        "teachers": teachers,
+        "teachers_vel": jax.tree.map(jnp.zeros_like, teachers),
+        "student": student,
+        "student_vel": jax.tree.map(jnp.zeros_like, student),
+    }
+
+
+def ppat_scan_graph(
     host_params: dict,
     w: jnp.ndarray,
     vel: jnp.ndarray,
@@ -202,23 +217,52 @@ def _ppat_scan(
     return host_params, w, vel, metrics, n0s, n1s
 
 
+_ppat_scan = functools.partial(jax.jit, static_argnames=("cfg",))(ppat_scan_graph)
+
+
+def ppat_entry_graph(
+    x: jnp.ndarray,    # (Nx_pad, d) padded client aligned embeddings
+    y: jnp.ndarray,    # (Ny_pad, d) padded host aligned embeddings
+    n_x: jnp.ndarray,  # traced true row counts
+    n_y: jnp.ndarray,
+    key: jax.Array,
+    cfg: PPATConfig,
+):
+    """One complete PPAT handshake as a pure graph: discriminator/generator
+    init + all adversarial rounds. Key discipline matches ``train_ppat``
+    exactly: ``split(key)[0]`` seeds the host discriminators and
+    ``split(key)[1]`` the scan. Returns (host_params, w, metrics, n0s,
+    n1s) — the trained discriminators, the translation matrix, the
+    per-round metric history, and the clean PATE vote counts for the
+    moments accountant.
+
+    Shared by the fused ``train_ppat`` path (one entry per program) and the
+    federation tick engine (one entry subgraph per pending handshake inside
+    a single batched tick program). The per-entry trace is identical in both,
+    which is what keeps batched ticks bit-identical to serial ones.
+    """
+    dim = x.shape[1]
+    kh, _ = jax.random.split(key)
+    host_params = _init_host_params(kh, dim, cfg)
+    w = jnp.eye(dim, dtype=jnp.float32)
+    vel = jnp.zeros_like(w)
+    _, sub = jax.random.split(key)
+    host_params, w, _, metrics, n0s, n1s = ppat_scan_graph(
+        host_params, w, vel, x, y, n_x, n_y, sub, cfg
+    )
+    return host_params, w, metrics, n0s, n1s
+
+
+_ppat_entry = functools.partial(jax.jit, static_argnames=("cfg",))(ppat_entry_graph)
+
+
 class PPATHost:
     """g_j side: all discriminators + the moments accountant (§3.2.2)."""
 
     def __init__(self, key, dim: int, y: jnp.ndarray, cfg: PPATConfig):
         self.cfg = cfg
         self.y = y  # host embeddings of aligned entities/relations — private
-        kt, ks = jax.random.split(key)
-        teachers = jax.vmap(lambda k: _init_disc(k, dim, cfg.hidden))(
-            jax.random.split(kt, cfg.num_teachers)
-        )
-        student = _init_disc(ks, dim, cfg.hidden)
-        self.params = {
-            "teachers": teachers,
-            "teachers_vel": jax.tree.map(jnp.zeros_like, teachers),
-            "student": student,
-            "student_vel": jax.tree.map(jnp.zeros_like, student),
-        }
+        self.params = _init_host_params(key, dim, cfg)
         self.accountant = MomentsAccountant(cfg.lam, cfg.delta)
         self._rng = np.random.default_rng(cfg.seed + 17)
 
@@ -302,15 +346,21 @@ def train_ppat(
     key = key if key is not None else jax.random.PRNGKey(cfg.seed)
     dim = x.shape[1]
     kh, kc = jax.random.split(key)
-    host = PPATHost(kh, dim, y, cfg)
     client = PPATClient(kc, dim, x, cfg)
     history = {"gen_loss": [], "student_loss": [], "teacher_loss": []}
     if fused:
-        key, sub = jax.random.split(key)
-        host.params, client.w, client.vel, metrics, n0s, n1s = _ppat_scan(
-            host.params, client.w, client.vel,
+        # ONE compiled program for the whole handshake, init included —
+        # the same trace the federation tick engine embeds per pending
+        # handshake, so serial and batched ticks agree bit-for-bit. The
+        # host object is assembled around the program's outputs (an eager
+        # PPATHost init would just duplicate the in-graph init).
+        host = PPATHost.__new__(PPATHost)
+        host.cfg, host.y = cfg, y
+        host.accountant = MomentsAccountant(cfg.lam, cfg.delta)
+        host._rng = np.random.default_rng(cfg.seed + 17)
+        host.params, client.w, metrics, n0s, n1s = _ppat_entry(
             _pad_rows(x, PPAT_BUCKET), _pad_rows(y, PPAT_BUCKET),
-            jnp.int32(x.shape[0]), jnp.int32(y.shape[0]), sub, cfg,
+            jnp.int32(x.shape[0]), jnp.int32(y.shape[0]), key, cfg,
         )
         # ONE device→host sync for the whole run
         metrics = {k: np.asarray(v) for k, v in metrics.items()}
@@ -318,6 +368,7 @@ def train_ppat(
             history[k] = [float(v) for v in metrics[k]]
         host.accountant.update(np.asarray(n0s).ravel(), np.asarray(n1s).ravel())
     else:
+        host = PPATHost(kh, dim, y, cfg)
         for _ in range(cfg.steps):
             key, sub = jax.random.split(key)
             xb, adv = client.sample_batch()          # client → host: adv only

@@ -84,6 +84,32 @@ def resolve_train_impl(impl: Optional[str] = None, family: str = "transe") -> st
     return impl
 
 
+def resolve_tick_impl(impl: Optional[str] = None, family: str = "transe") -> str:
+    """Pick the federation tick execution engine: ``batched`` or ``reference``.
+
+    ``batched`` — the tick engine plans every Ready owner's pending work at
+    tick start and executes the whole tick (PPAT, aggregation, retrain,
+    backtrack scoring) as ONE compiled program of independent per-owner
+    subgraphs; ``reference`` — the serial per-owner loop (the seed protocol
+    driver), kept as the parity oracle. ``REPRO_TICK_IMPL`` overrides.
+
+    The batched engine embeds the device-resident training scan per owner,
+    so when the training step resolves to the host-loop ``reference`` impl
+    (``REPRO_TRAIN_IMPL=reference``) ticks fall back to ``reference`` too.
+    """
+    if impl is None:
+        impl = os.environ.get("REPRO_TICK_IMPL", "").strip().lower() or None
+    if impl is None:
+        impl = (
+            "reference"
+            if resolve_train_impl(None, family) == "reference"
+            else "batched"
+        )
+    if impl not in ("batched", "reference"):
+        raise ValueError(f"unknown tick impl {impl!r} (batched|reference)")
+    return impl
+
+
 def resolve_rank_impl(impl: Optional[str] = None) -> str:
     """Pick the fused-rank engine implementation: ``pallas`` or ``xla``.
 

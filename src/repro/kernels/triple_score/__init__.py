@@ -1,4 +1,8 @@
-from repro.kernels.triple_score.ops import fused_ranks, pairwise_scores  # noqa: F401
+from repro.kernels.triple_score.ops import (  # noqa: F401
+    fused_ranks,
+    fused_ranks_graph,
+    pairwise_scores,
+)
 from repro.kernels.triple_score.ref import (  # noqa: F401
     fused_ranks_ref,
     pairwise_scores_ref,

@@ -74,10 +74,7 @@ def pairwise_scores(
 
 
 # ------------------------------------------------------------- fused ranks
-@functools.partial(
-    jax.jit, static_argnames=("mode", "block_q", "block_e", "interpret")
-)
-def _fused_ranks_pallas(
+def fused_ranks_pallas_graph(
     q: jnp.ndarray,
     ent: jnp.ndarray,
     gold: jnp.ndarray,
@@ -107,8 +104,12 @@ def _fused_ranks_pallas(
     return out[:b, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "block_e"))
-def _fused_ranks_xla(
+_fused_ranks_pallas = functools.partial(
+    jax.jit, static_argnames=("mode", "block_q", "block_e", "interpret")
+)(fused_ranks_pallas_graph)
+
+
+def fused_ranks_xla_graph(
     q: jnp.ndarray,
     ent: jnp.ndarray,
     gold: jnp.ndarray,
@@ -138,6 +139,36 @@ def _fused_ranks_xla(
 
     counts, _ = jax.lax.scan(step, jnp.zeros((b,), jnp.int32), (blocks, cols))
     return counts
+
+
+_fused_ranks_xla = functools.partial(
+    jax.jit, static_argnames=("mode", "block_e")
+)(fused_ranks_xla_graph)
+
+
+def fused_ranks_graph(
+    q: jnp.ndarray,
+    ent: jnp.ndarray,
+    gold: jnp.ndarray,
+    filt: jnp.ndarray,
+    *,
+    mode: str = "l1",
+    block_q: int = 8,
+    block_e: int = 512,
+    impl: Optional[str] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """``fused_ranks`` as a pure graph (no jit boundary) — for callers that
+    embed rank counting inside a larger compiled program (the federation tick
+    engine). Resolves the implementation exactly like ``fused_ranks``."""
+    assert mode in SCORE_MODES, mode
+    impl = resolve_rank_impl(impl)
+    if impl == "pallas":
+        return fused_ranks_pallas_graph(
+            q, ent, gold, filt, mode=mode, block_q=block_q, block_e=block_e,
+            interpret=resolve_interpret(interpret),
+        )
+    return fused_ranks_xla_graph(q, ent, gold, filt, mode=mode, block_e=block_e)
 
 
 def fused_ranks(

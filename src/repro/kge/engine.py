@@ -154,10 +154,24 @@ def _pallas_step(params, spec, pos, neg, lr, *, interpret):
 # ---------------------------------------------------------------------------
 # the multi-epoch device scan
 # ---------------------------------------------------------------------------
-@functools.partial(
-    jax.jit, static_argnames=("spec", "epochs", "batch", "impl", "interpret")
-)
-def _train_scan(
+def _renorm_rows(
+    params: Dict[str, jnp.ndarray], ids: jnp.ndarray, skip: jnp.ndarray
+) -> Dict[str, jnp.ndarray]:
+    """Project only the entity rows named by ``ids`` onto the unit ball —
+    the sparse twin of ``normalize_entities`` (which maps every row).
+    Duplicate ids scatter the same value, so the write is deterministic;
+    ``skip`` (traced bool) selects the identity instead (epoch 0 must read
+    raw rows, exactly like the dense schedule)."""
+    rows = params["ent"][ids]
+    n = jnp.linalg.norm(rows, axis=-1, keepdims=True)
+    projected = rows / jnp.maximum(n, 1.0)
+    new_rows = jnp.where(skip, rows, projected)
+    out = dict(params)
+    out["ent"] = params["ent"].at[ids].set(new_rows)
+    return out
+
+
+def train_scan_graph(
     params: Dict[str, jnp.ndarray],
     triples: jnp.ndarray,       # (N_pad, 3) int32, N_pad % batch == 0, cycled
     key: jax.Array,
@@ -169,8 +183,34 @@ def _train_scan(
     batch: int,
     impl: str,
     interpret: bool,
+    renorm: str = "dense",
 ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
-    """All epochs × minibatches in one compiled scan → (params, losses)."""
+    """All epochs × minibatches as one traceable scan → (params, losses).
+
+    This is the pure graph shared by the jitted ``_train_scan`` wrapper and
+    the federation tick engine (which embeds one copy per owner inside a
+    single batched tick program — the per-owner subgraph is this exact trace,
+    which is what keeps batched ticks bit-identical to serial ones).
+
+    ``renorm`` picks the entity-norm projection schedule:
+
+      * ``dense`` — the seed schedule: ``normalize_entities`` over the FULL
+        table after every epoch, O(E·d) per epoch.
+      * ``sparse`` — project only the rows an epoch is about to gather
+        (start-of-epoch, from that epoch's pos/neg ids — they are known
+        before the minibatch scan because sampling derives from the epoch
+        key), plus ONE full projection after the last epoch, O(4·N_pad·d)
+        per epoch + O(E·d) once. A row read at most one epoch after its
+        last touch sees exactly the value the dense schedule would show
+        it, and the final table is fully projected. The deviation: the
+        dense schedule re-projects already-projected rows every epoch and
+        x/‖x‖ is not a bit-level fixpoint, so a row untouched for k ≥ 2
+        epochs accumulates up to k−1 extra 1-ulp projections under dense
+        that the single sparse projection skips. With epochs=1, or when
+        every entity is touched every epoch, the two schedules are
+        bit-identical (pinned in tests); in general they agree to fp
+        tolerance.
+    """
     n_pad = triples.shape[0]
     nb = n_pad // batch
 
@@ -182,7 +222,8 @@ def _train_scan(
             p, spec, bp, bn, lr, unique_e=3 * batch, unique_r=batch
         )
 
-    def epoch_body(p, ekey):
+    def epoch_body(p, einp):
+        eidx, ekey = einp
         kp, kc, ks = jax.random.split(ekey, 3)
         perm = jax.random.permutation(kp, n_pad)
         pos = triples[perm].reshape(nb, batch, 3)
@@ -200,10 +241,36 @@ def _train_scan(
             ],
             axis=-1,
         )
+        if renorm == "sparse":
+            touched = jnp.concatenate(
+                [pos[..., 0], pos[..., 2], neg[..., 0], neg[..., 2]]
+            ).reshape(-1)
+            p = _renorm_rows(p, touched, eidx == 0)
         p, losses = jax.lax.scan(step, p, (pos, neg))
-        return normalize_entities(p), jnp.mean(losses)
+        if renorm == "dense":
+            p = normalize_entities(p)
+        return p, jnp.mean(losses)
 
-    return jax.lax.scan(epoch_body, params, jax.random.split(key, epochs))
+    params, losses = jax.lax.scan(
+        epoch_body, params,
+        (jnp.arange(epochs), jax.random.split(key, epochs)),
+    )
+    if renorm == "sparse":
+        params = normalize_entities(params)
+    return params, losses
+
+
+_train_scan = functools.partial(
+    jax.jit,
+    static_argnames=("spec", "epochs", "batch", "impl", "interpret", "renorm"),
+)(train_scan_graph)
+
+
+def resolve_renorm(tri_pad: int, ent_rows: int) -> str:
+    """Pick the entity-norm projection schedule from static shapes: the
+    sparse schedule gathers 4·N_pad rows per epoch, so it only wins when
+    that is cheaper than the dense full-table pass."""
+    return "sparse" if 4 * tri_pad < ent_rows else "dense"
 
 
 def pad_tables(
@@ -268,12 +335,13 @@ def train_epochs_device(
     tri = jnp.asarray(triples, jnp.int32)
     b = min(batch_size, tri.shape[0])
     tri = pad_triples(tri, b)
-    padded, _, _ = pad_tables(params, model)
+    padded, e_pad, _ = pad_tables(params, model)
     padded, losses = _train_scan(
         padded, tri, key, jnp.float32(lr),
         jnp.int32(model.num_entities),
         spec=shape_spec(model), epochs=epochs, batch=b,
         impl=impl, interpret=interpret,
+        renorm=resolve_renorm(tri.shape[0], e_pad),
     )
     return strip_tables(padded, model), losses
 

@@ -130,6 +130,27 @@ def margin_loss(pos_scores: jnp.ndarray, neg_scores: jnp.ndarray, margin: float)
     return jnp.mean(jax.nn.relu(margin - pos_scores + neg_scores))
 
 
+def virtual_pad_rows(
+    params: Dict[str, jnp.ndarray], dim: int, n_ent: int, n_rel: int
+) -> Dict[str, jnp.ndarray]:
+    """Inert rows appended to the family-specific tables when ``n_ent``
+    virtual entities / ``n_rel`` virtual relations extend ``ent``/``rel``:
+    zero projections for TransD, unit normals for TransH, identity maps for
+    TransR. The ONE definition of these rules — shared by
+    ``KGETrainer.extend_tables`` and the tick engine's in-graph extension,
+    so the two cannot drift apart per family."""
+    pads: Dict[str, jnp.ndarray] = {}
+    if "ent_p" in params:
+        pads["ent_p"] = jnp.zeros((n_ent, dim), jnp.float32)
+        pads["rel_p"] = jnp.zeros((n_rel, dim), jnp.float32)
+    if "norm_vec" in params:
+        padr = jnp.ones((n_rel, dim), jnp.float32)
+        pads["norm_vec"] = padr / jnp.sqrt(jnp.float32(dim))
+    if "proj" in params:
+        pads["proj"] = jnp.tile(jnp.eye(dim)[None], (n_rel, 1, 1))
+    return pads
+
+
 def normalize_entities(params: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
     """Project entity embeddings onto the unit ball (TransE constraint)."""
     out = dict(params)

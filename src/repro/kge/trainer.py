@@ -83,22 +83,17 @@ class KGETrainer:
         """Temporarily append DP-translated virtual rows + their triples."""
         import dataclasses
 
+        from repro.kge.models import virtual_pad_rows
+
         assert self._virtual == (0, 0), "virtual extension already active"
         self.params = dict(self.params)
         self.params["ent"] = jnp.concatenate([self.params["ent"], v_ent])
         self.params["rel"] = jnp.concatenate([self.params["rel"], v_rel])
-        if "ent_p" in self.params:  # transd per-entity projections
-            pad = jnp.zeros((len(v_ent), self.model.dim), jnp.float32)
-            self.params["ent_p"] = jnp.concatenate([self.params["ent_p"], pad])
-            padr = jnp.zeros((len(v_rel), self.model.dim), jnp.float32)
-            self.params["rel_p"] = jnp.concatenate([self.params["rel_p"], padr])
-        if "norm_vec" in self.params:
-            padr = jnp.ones((len(v_rel), self.model.dim), jnp.float32)
-            padr = padr / jnp.sqrt(jnp.float32(self.model.dim))
-            self.params["norm_vec"] = jnp.concatenate([self.params["norm_vec"], padr])
-        if "proj" in self.params:
-            eye = jnp.tile(jnp.eye(self.model.dim)[None], (len(v_rel), 1, 1))
-            self.params["proj"] = jnp.concatenate([self.params["proj"], eye])
+        pads = virtual_pad_rows(
+            self.params, self.model.dim, len(v_ent), len(v_rel)
+        )
+        for k, pad in pads.items():
+            self.params[k] = jnp.concatenate([self.params[k], pad])
         self._virtual = (len(v_ent), len(v_rel))
         self._extra_triples = np.asarray(extra_triples, np.int32)
         self._tri_cache = None  # store contents changed, not just its length
@@ -131,6 +126,15 @@ class KGETrainer:
         self._extra_triples = None
         self._tri_cache = None
 
+    def consume_engine_key(self) -> jax.Array:
+        """Advance the engine sampling stream and return the subkey the next
+        device-resident ``train_epochs`` call would use. The federation tick
+        engine draws from this SAME stream when it retrains an owner inside a
+        batched tick program, so serial and batched ticks sample identically.
+        """
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
     def train_epochs(
         self, epochs: int = 1, *, impl: Optional[str] = None
     ) -> float:
@@ -147,7 +151,7 @@ class KGETrainer:
             return self._train_epochs_reference(tr, epochs)
         from repro.kge.engine import train_epochs_device
 
-        self._key, sub = jax.random.split(self._key)
+        sub = self.consume_engine_key()
         self.params, losses = train_epochs_device(
             self.params, self.model, self._padded_triples(tr), sub,
             epochs=epochs, batch_size=self.batch_size, lr=self.lr,

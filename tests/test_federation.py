@@ -77,3 +77,76 @@ def test_epsilon_recorded_per_handshake(trained_fed):
 
 def test_busy_state_cleared(trained_fed):
     assert all(s is not NodeState.BUSY for s in trained_fed.state.values())
+
+
+# ------------------------------------------- scheduler protocol invariants
+def test_broadcast_wakes_sleeping_partners(universe):
+    """Alg. 1 l. 30 / Fig. 2: a handshake signal is also a wake-up signal."""
+    fed = FederationScheduler(universe, dim=16, local_epochs=1, seed=0)
+    for n in universe:
+        fed.state[n] = NodeState.SLEEP
+    fed.broadcast("A")
+    for partner in fed.registry.partners("A"):
+        assert fed.state[partner] is NodeState.READY
+        assert list(fed.queue[partner]) == ["A"]
+    assert fed.state["A"] is NodeState.SLEEP  # no self-wake
+
+
+def test_broadcast_dedup_is_o1_under_repeated_broadcasts(universe):
+    """Repeated broadcasts from every owner leave each queue with at most
+    one offer per partner — the pending-set mirror stays consistent."""
+    fed = FederationScheduler(universe, dim=16, local_epochs=1, seed=0)
+    for _ in range(7):
+        for n in universe:
+            fed.broadcast(n)
+    for n in universe:
+        offers = list(fed.queue[n])
+        assert len(offers) == len(set(offers))
+        assert set(offers) == fed._queued[n]
+        assert set(offers) == set(fed.registry.partners(n))
+
+
+def test_quiescence_terminates_without_self_train(universe):
+    """With self-training off and a score_fn that never improves, every
+    owner drains its queue and sleeps — run() stops before max_ticks."""
+    fed = FederationScheduler(
+        universe, dim=16, ppat_cfg=PPATConfig(steps=2, seed=0),
+        local_epochs=1, update_epochs=1, seed=0,
+        score_fn=lambda name: 0.0,  # never beats the init score
+    )
+    fed.best_score = {n: 1.0 for n in universe}
+    fed.best_snapshot = {n: fed.trainers[n].snapshot() for n in universe}
+    for n in universe:
+        fed.broadcast(n)
+    fed.run(max_ticks=50, self_train=False)
+    assert fed._tick < 50, "run() should hit quiescence, not the tick cap"
+    assert all(not q for q in fed.queue.values())
+    assert not any(e.accepted for e in fed.events)
+    # a further run immediately puts everyone to sleep and stays quiescent
+    fed.run(max_ticks=2, self_train=False)
+    assert all(s is NodeState.SLEEP for s in fed.state.values())
+
+
+@pytest.mark.parametrize("tick_impl", ["reference", "batched"])
+def test_rejected_backtrack_restores_bit_identical_params(universe, tick_impl):
+    """Alg. 1 l. 17: a rejected KGEmb-Update must leave EVERY param table
+    bit-identical to the pre-handshake snapshot, under both tick engines."""
+    fed = FederationScheduler(
+        universe, dim=16, ppat_cfg=PPATConfig(steps=3, seed=0),
+        local_epochs=2, update_epochs=1, seed=0,
+    )
+    fed.initial_training()
+    fed.score_fn = lambda name: -1.0  # force every backtrack to reject
+    snaps = {
+        n: {k: np.asarray(v) for k, v in fed.best_snapshot[n].items()}
+        for n in universe
+    }
+    fed.run(max_ticks=2, tick_impl=tick_impl)
+    rejected = [e for e in fed.events if e.kind != "init"]
+    assert rejected and not any(e.accepted for e in rejected)
+    for n in universe:
+        for k, v in snaps[n].items():
+            np.testing.assert_array_equal(
+                np.asarray(fed.trainers[n].params[k]), v,
+                err_msg=f"{tick_impl}: {n}.{k} not restored bit-identically",
+            )
