@@ -1,15 +1,24 @@
 PY := PYTHONPATH=src python
 
-.PHONY: tier1 test bench-eval bench-train bench-tick bench bench-json
+.PHONY: tier1 test check-hygiene bench-eval bench-train bench-tick bench bench-json
 
-# CI gate: the full suite, then the engine parity tests explicitly (they are
-# the acceptance bars for the streaming fused-rank eval engine, the
-# device-resident training engine, and the batched federation tick engine).
-tier1:
+# CI gate: repo hygiene, the full suite, then the engine parity tests
+# explicitly (they are the acceptance bars for the streaming fused-rank eval
+# engine, the device-resident training engine, and the batched federation
+# tick engine).
+tier1: check-hygiene
 	$(PY) -m pytest -x -q
 	$(PY) -m pytest -q tests/test_eval_engine.py -k "parity"
 	$(PY) -m pytest -q tests/test_train_engine.py -k "parity or retrace"
 	$(PY) -m pytest -q tests/test_tick_engine.py -k "parity or reused"
+
+# fail if generated artifacts (bytecode, pytest caches) are ever tracked
+# again — PR 3 accidentally shipped 12 __pycache__/*.pyc files
+check-hygiene:
+	@bad=$$(git ls-files | grep -E '(\.pyc$$|\.pyo$$|__pycache__|\.pytest_cache)' || true); \
+	if [ -n "$$bad" ]; then \
+		echo "tracked generated files:"; echo "$$bad"; exit 1; \
+	fi
 
 test:
 	$(PY) -m pytest -q
@@ -22,13 +31,20 @@ bench-eval:
 bench-train:
 	PYTHONPATH=src:. python benchmarks/bench_train_engine.py --csv benchmarks/train_engine.csv
 
-# serial reference tick vs batched tick engine at 8 owners, E=10k each
+# serial reference tick vs batched (single-device) vs sharded tick engine at
+# 8 owners, E=10k each; 8 simulated host devices so the sharded row measures
+# real multi-device placement on CPU CI
 bench-tick:
-	PYTHONPATH=src:. python benchmarks/bench_federation_tick.py --csv benchmarks/federation_tick.csv
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" PYTHONPATH=src:. python benchmarks/bench_federation_tick.py --csv benchmarks/federation_tick.csv
 
 bench:
 	PYTHONPATH=src:. python benchmarks/run.py
 
-# same, plus machine-readable BENCH_<suite>.json artifacts in benchmarks/
+# same, plus machine-readable BENCH_<suite>.json artifacts at the repo root
+# (the committed perf trajectory). Runs single-device on purpose — the
+# committed baselines track the plain CPU-CI environment; the sharded tick
+# rows record their device count in tick_engine.sharded_devices.* so a
+# baseline regenerated under a different device count diffs loudly. The
+# multi-device sharded measurement lives in `make bench-tick`.
 bench-json:
 	PYTHONPATH=src:. python benchmarks/run.py --json

@@ -48,11 +48,11 @@ def _make(e: int, *, n_queries: int, dim: int, seed: int = 0) -> tuple:
 
 def _time_path(fn, *, repeats: int = 1) -> tuple:
     fn()  # warm-up: compile + trace outside the timed region
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = None
     for _ in range(repeats):
         out = fn()
-    return out, (time.time() - t0) / repeats
+    return out, (time.perf_counter() - t0) / repeats
 
 
 def main(argv=None) -> None:

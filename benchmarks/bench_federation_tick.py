@@ -1,22 +1,28 @@
 """Batched federation tick engine vs the serial reference tick.
 
 Builds an all-pairs-aligned federation of ``--owners`` KGs (E = 10k entities
-each by default), trains them locally, then drives two schedulers from the
-same seed — one with ``tick_impl="reference"`` (the serial per-owner loop),
-one with ``tick_impl="batched"`` (one compiled program per tick) — through
-identical tick sequences.
+each by default), trains them locally, then drives three schedulers from the
+same seed — ``tick_impl="reference"`` (the serial per-owner loop),
+``tick_impl="batched"`` with ``tick_placement="single"`` (per-signature
+entry programs on one device), and ``tick_placement="sharded"`` (signature
+buckets shard_map'ed across ``jax.devices()``) — through identical tick
+sequences.
 
-Parity is asserted in-bench before any number is reported: both schedulers
+Parity is asserted in-bench before any number is reported: all schedulers
 must produce the same accept/reject decisions, the same backtrack scores and
 ε history, and bit-identical final embeddings (the engine's contract; also
-pinned in tier-1 by ``tests/test_tick_engine.py``).
+pinned in tier-1 by ``tests/test_tick_engine.py`` /
+``tests/test_tick_sharded.py``).
 
 Timing: warm-up ticks run first until the batched program cache stops
 growing (compiles stay out of the timed region — steady-state federation
 reuses the cached per-signature programs), then ``--ticks`` matched ticks
-are timed for each impl. Emits ``tick_engine.{reference|batched}.tick``
-µs-per-tick rows plus the speedup. The acceptance bar for this engine is
-≥ 3× at 8 owners on CPU CI. ``--csv <path>`` appends the rows to a file.
+are timed for each impl. Emits ``tick_engine.{reference|batched|sharded}``
+µs-per-tick rows plus the speedups. The acceptance bar for the batched
+engine is ≥ 3× at 8 owners on CPU CI. The sharded row is honest about its
+device count: in a single-device process it degenerates to round-robin over
+one device (the ``make bench-tick`` target forces 8 host devices via
+``XLA_FLAGS``). ``--csv <path>`` appends the rows to a file.
 """
 from __future__ import annotations
 
@@ -96,42 +102,71 @@ def main(argv=None) -> None:
 
     kgs = _build_universe(args.owners, args.entities, args.triples, args.aligned)
 
-    feds = {}
-    for impl in ("reference", "batched"):
-        feds[impl] = _make(kgs, args)
-        feds[impl].initial_training()
+    import jax
 
-    # warm-up: compile every program both impls will use; stop early once the
-    # batched tick-program cache stops growing (signature set is saturated)
+    ndev = len(jax.devices())
+    # (scheduler key, tick_impl, tick_placement)
+    runs = [
+        ("reference", "reference", None),
+        ("batched", "batched", "single"),
+        ("sharded", "batched", "sharded"),
+    ]
+    feds = {}
+    for key, _, _ in runs:
+        feds[key] = _make(kgs, args)
+        feds[key].initial_training()
+
+    def _one_tick(key, impl, placement):
+        feds[key].run(max_ticks=1, tick_impl=impl, tick_placement=placement)
+
+    # warm-up: compile every program each impl will use; stop early once the
+    # tick-program cache stops growing (signature set is saturated)
     progs = -1
     for w in range(args.warm_ticks):
-        for impl in ("reference", "batched"):
-            feds[impl].run(max_ticks=1, tick_impl=impl)
-        _assert_parity(feds["reference"], feds["batched"])
+        for key, impl, placement in runs:
+            _one_tick(key, impl, placement)
+        for key, _, _ in runs[1:]:
+            _assert_parity(feds["reference"], feds[key])
         if tick_program_cache_size() == progs and w >= 1:
             break
         progs = tick_program_cache_size()
 
-    timed = {"reference": 0.0, "batched": 0.0}
+    timed = {key: 0.0 for key, _, _ in runs}
     for _ in range(args.ticks):
-        for impl in ("reference", "batched"):
-            t0 = time.time()
-            feds[impl].run(max_ticks=1, tick_impl=impl)
-            timed[impl] += time.time() - t0
-        _assert_parity(feds["reference"], feds["batched"])
+        for key, impl, placement in runs:
+            t0 = time.perf_counter()
+            _one_tick(key, impl, placement)
+            timed[key] += time.perf_counter() - t0
+        for key, _, _ in runs[1:]:
+            _assert_parity(feds["reference"], feds[key])
 
     us_ref = timed["reference"] * 1e6 / args.ticks
     us_bat = timed["batched"] * 1e6 / args.ticks
+    us_sh = timed["sharded"] * 1e6 / args.ticks
     speedup = us_ref / us_bat
+    sh_speedup = us_ref / us_sh
     rows = [
         (f"tick_engine.reference.N{args.owners}.E{args.entities}", us_ref,
          "serial per-owner tick loop"),
         (f"tick_engine.batched.N{args.owners}.E{args.entities}", us_bat,
-         "one compiled program per tick"),
+         "per-signature entry programs, single device"),
+        # the device count lives in the derived column, NOT the row name:
+        # BENCH_*.json baselines are diffed across PRs by key, and a
+        # D-suffixed key would fragment the sharded trajectory the moment
+        # the device count changes
+        (f"tick_engine.sharded.N{args.owners}.E{args.entities}", us_sh,
+         f"signature buckets shard_map'ed over D={ndev} device(s)"),
+        # the measurement environment, recorded IN the json artifact (derived
+        # text is CSV-only): a baseline diff that mixes device counts is
+        # visible instead of silent
+        (f"tick_engine.sharded_devices.N{args.owners}.E{args.entities}",
+         float(ndev), "device count behind the sharded rows"),
         # value = the ratio itself (dimensionless), so BENCH_*.json artifacts
         # track the speedup directly and the ≥3× bar is machine-checkable
         (f"tick_engine.speedup.N{args.owners}.E{args.entities}", speedup,
          f"speedup={speedup:.1f}x parity=bitwise"),
+        (f"tick_engine.speedup_sharded.N{args.owners}.E{args.entities}",
+         sh_speedup, f"speedup={sh_speedup:.1f}x parity=bitwise D={ndev}"),
     ]
     for name, us, derived in rows:
         emit(name, us, derived)

@@ -14,14 +14,14 @@ def main() -> None:
     # λ per Eqs. 9–10 (PATE's γ): noise = Lap(1/λ); 0 = the paper's "No noise"
     for lam_name, lam in [("none", 0.0), ("0.05", 0.05), ("1", 1.0), ("2", 2.0), ("5", 5.0)]:
         kgs = small_universe(seed=0, n=2)
-        t0 = time.time()
+        t0 = time.perf_counter()
         fed = FederationScheduler(
             kgs, dim=32, ppat_cfg=PPATConfig(steps=120, lam=lam, seed=0),
             local_epochs=150, update_epochs=40, seed=0,
         )
         fed.initial_training()
         fed.run(max_ticks=2)
-        dt = (time.time() - t0) * 1e6
+        dt = (time.perf_counter() - t0) * 1e6
         accs = {
             n: triple_classification_accuracy(
                 fed.trainers[n].params, fed.trainers[n].model, kgs[n]

@@ -19,7 +19,7 @@ def main() -> None:
          f"eps={eps:.2f};expected=2.73;l={l};alpha_per_handshake={alpha}")
 
     # --- honest per-query accounting at λ=0.05, 4 teachers ----------------
-    t0 = time.time()
+    t0 = time.perf_counter()
     acc = MomentsAccountant(lam=0.05, delta=1e-5)
     rng = np.random.default_rng(0)
     queries = 0
@@ -27,7 +27,7 @@ def main() -> None:
         n1 = rng.integers(0, 5, 32)
         acc.update(4 - n1, n1)
         queries += 32
-    dt = (time.time() - t0) * 1e6
+    dt = (time.perf_counter() - t0) * 1e6
     emit("privacy.per_query_accounting", dt,
          f"queries={queries};eps={acc.epsilon():.2f};best_l={acc.best_moment()}")
 

@@ -31,13 +31,13 @@ def main() -> None:
         x = tra.get_entity_embeddings(ia[sel])
         y = trb.get_entity_embeddings(ib[sel])
 
-        t0 = time.time()
+        t0 = time.perf_counter()
         train_ppat(x, y, cfg)
-        t_ppat = time.time() - t0
+        t_ppat = time.perf_counter() - t0
 
-        t0 = time.time()
+        t0 = time.perf_counter()
         trb.train_epochs(20)  # the KGEmb-Update retrain
-        t_update = time.time() - t0
+        t_update = time.perf_counter() - t0
 
         emit(
             f"fig7.aligned_{len(sel)}", t_ppat * 1e6,

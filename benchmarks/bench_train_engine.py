@@ -100,9 +100,9 @@ def main(argv=None) -> None:
             # warm-up with the SAME epoch count: the engine specializes the
             # scan on it, and compile time must stay out of the timed region
             tr.train_epochs(args.epochs, impl=impl)
-            t0 = time.time()
+            t0 = time.perf_counter()
             tr.train_epochs(args.epochs, impl=impl)
-            return time.time() - t0
+            return time.perf_counter() - t0
 
         nb_old = len(kg.train) // args.batch
         dt_old = run("reference")

@@ -37,11 +37,13 @@ def write_bench_json(suite: str, rows: Dict[str, float], out_dir: str) -> str:
 
 
 def timed(fn, *args, repeats: int = 1, **kw):
-    t0 = time.time()
+    # perf_counter, not time.time(): benchmark durations must be monotonic
+    # and immune to NTP/clock adjustments
+    t0 = time.perf_counter()
     out = None
     for _ in range(repeats):
         out = fn(*args, **kw)
-    dt = (time.time() - t0) / repeats
+    dt = (time.perf_counter() - t0) / repeats
     return out, dt * 1e6  # µs
 
 

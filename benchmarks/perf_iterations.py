@@ -37,7 +37,7 @@ def measure(cfg, shape_name, tcfg=None, label="", layout="tp"):
     mesh = make_production_mesh()
     shape = INPUT_SHAPE_BY_NAME[shape_name]
     wl = make_workload(cfg, shape_name, mesh, tcfg=tcfg, layout=layout)
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh:
         compiled = (
             jax.jit(wl["fn"], in_shardings=wl["in_shardings"],
@@ -49,7 +49,7 @@ def measure(cfg, shape_name, tcfg=None, label="", layout="tp"):
     txt = compiled.as_text()
     res = {
         "arch": cfg.name, "shape": shape_name, "variant": label,
-        "compile_s": round(time.time() - t0, 1),
+        "compile_s": round(time.perf_counter() - t0, 1),
         "memory": {"peak_bytes_per_device": peak_memory_bytes(mem),
                    "argument_bytes_per_device": int(mem.argument_size_in_bytes)},
         "cost": {"flops": float(cost.get("flops", 0.0)),

@@ -48,10 +48,16 @@ SUITES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    # default to the REPO ROOT, not benchmarks/: the committed BENCH_*.json
+    # perf-trajectory artifacts live at the root, and defaulting elsewhere
+    # quietly left that trajectory empty
+    repo_root = os.path.abspath(
+        os.path.join(os.path.dirname(__file__) or ".", "..")
+    )
     ap.add_argument(
-        "--json", nargs="?", const=os.path.dirname(__file__) or ".",
+        "--json", nargs="?", const=repo_root,
         default=None, metavar="DIR",
-        help="write BENCH_<suite>.json per suite (default: benchmarks/)",
+        help="write BENCH_<suite>.json per suite (default: the repo root)",
     )
     args = ap.parse_args()
 
@@ -60,7 +66,7 @@ def main() -> None:
     for name, fn in SUITES:
         if args.only and not name.startswith(args.only):
             continue
-        t0 = time.time()
+        t0 = time.perf_counter()
         drain_recorded()
         suite_ok = True
         try:
@@ -79,7 +85,10 @@ def main() -> None:
             if rows:
                 path = write_bench_json(name, rows, args.json)
                 print(f"# wrote {path}", file=sys.stderr)
-        print(f"# suite {name} done in {time.time()-t0:.0f}s", file=sys.stderr)
+        print(
+            f"# suite {name} done in {time.perf_counter()-t0:.0f}s",
+            file=sys.stderr,
+        )
     if failures:
         sys.exit(1)
 

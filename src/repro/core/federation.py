@@ -19,10 +19,13 @@ snapshot (a tick-consistent view: mid-tick broadcasts and accepts take
 effect from the NEXT tick). The plan then executes through one of two
 engines (``kernels.dispatch.resolve_tick_impl`` / ``REPRO_TICK_IMPL``):
 
-  * ``batched`` (default) — ``core.tick_engine`` compiles the whole tick
-    into ONE device program of independent per-owner subgraphs (PPAT,
-    aggregation, retrain, backtrack scoring), bit-identical to the serial
-    order-independent case with the same per-pair keys;
+  * ``batched`` (default) — ``core.tick_engine`` executes the tick as
+    independent per-owner entry programs (PPAT, aggregation, retrain,
+    backtrack scoring), deduped by entry signature at trace time and placed
+    across ``jax.devices()`` per ``tick_placement``
+    ("auto" | "single" | "sharded", ``REPRO_TICK_PLACEMENT`` override) —
+    bit-identical to the serial order-independent case with the same
+    per-pair keys;
   * ``reference`` — the serial per-owner loop below, kept as the parity
     oracle.
 
@@ -122,6 +125,7 @@ class FederationScheduler:
         margin: float = 2.0,
         batch_size: int = 100,
         tick_impl: Optional[str] = None,
+        tick_placement: Optional[str] = None,
     ):
         # score_split="test" reproduces Alg. 1 verbatim (the paper backtracks
         # on g_j.test); "valid" (default) is the leakage-free variant.
@@ -132,6 +136,10 @@ class FederationScheduler:
         self.score_metric = score_metric
         self.score_max_test = score_max_test
         self.tick_impl = tick_impl
+        # "auto" | "single" | "sharded" (None → env/auto): where the batched
+        # engine places tick-entry programs; resolved per execute so a
+        # REPRO_TICK_PLACEMENT change between runs takes effect
+        self.tick_placement = tick_placement
         self.kgs = kgs
         self.registry = registry or AlignmentRegistry.from_kgs(kgs)
         families = families or {n: "transe" for n in kgs}
@@ -169,7 +177,13 @@ class FederationScheduler:
         # backtrack-scoring inputs are built from the immutable kg splits —
         # cache them per owner instead of regenerating fixed negatives /
         # rebuilding CSR filters on every score call (the floating filter
-        # width also retraced the rank kernels every tick)
+        # width also retraced the rank kernels every tick). Entries are
+        # version-keyed on their actual dependencies: accuracy negatives on
+        # the owner's scoring universe (``_score_universe`` — anything that
+        # grows the entity tables, e.g. an accepted virtual extension held
+        # across scoring, redraws them against the POST-accept universe),
+        # hit@10 CSR filters on the scoring config only (they are
+        # universe-extent independent).
         self._acc_inputs: Dict[str, tuple] = {}
         self._lp_inputs: Dict[str, tuple] = {}
         from repro.core.tick_engine import TickEngine
@@ -177,33 +191,64 @@ class FederationScheduler:
         self._tick_engine = TickEngine(self)
 
     # ------------------------------------------------------------ scoring
+    def _score_universe(self, name: str) -> tuple:
+        """Version key for an owner's cached scoring inputs: the scoring
+        config plus the CURRENT embedding-universe extents. In the standard
+        protocol virtual rows are stripped before scoring, so this is
+        constant; it changes exactly when an extension is accepted into (or
+        otherwise grows) the owner's tables — the case where pre-accept
+        fixed negatives / CSR filters would be stale."""
+        m = self.trainers[name].model
+        return (
+            self.score_split, self.score_max_test,
+            m.num_entities, m.num_relations,
+        )
+
     def _accuracy_inputs(self, name: str) -> tuple:
         """(valid, fixed 1:1 negatives) for the accuracy backtrack metric —
-        built once per owner (kg splits are immutable)."""
+        built once per owner per scoring-universe version (kg splits are
+        immutable; the negative-sampling range is not, see
+        ``_score_universe``)."""
+        version = self._score_universe(name)
         cached = self._acc_inputs.get(name)
-        if cached is None:
+        if cached is None or cached[0] != version:
             from repro.kge.data import corrupt_triples
 
             kg = self.kgs[name]
             rng = np.random.default_rng(0)  # fixed negatives → comparable
             va = kg.test if self.score_split == "test" else kg.valid
-            cached = (va, corrupt_triples(rng, va, kg.num_entities))
+            # corrupt against the owner's CURRENT entity universe (matches
+            # the trainer's extended-count negative sampling) — equals
+            # kg.num_entities whenever no extension is active
+            neg = corrupt_triples(
+                rng, va, self.trainers[name].model.num_entities
+            )
+            cached = (version, (va, neg))
             self._acc_inputs[name] = cached
-        return cached
+        return cached[1]
 
     def _hit10_inputs(self, name: str) -> tuple:
         """(test, filt_t, filt_h) for the hit@10 backtrack metric — CSR
-        filters are a Python pass over every triple, built once per owner."""
+        filters are a Python pass over every triple, built once per owner
+        per scoring CONFIG. Unlike the accuracy negatives, these arrays do
+        not depend on the embedding-universe extents (ids below the base
+        entity count stay valid when virtual rows are appended, and virtual
+        candidates are correctly unfiltered), so growing the tables must NOT
+        trigger the expensive rebuild — only a split/max_test change does."""
+        version = (self.score_split, self.score_max_test)
         cached = self._lp_inputs.get(name)
-        if cached is None:
+        if cached is None or cached[0] != version:
             from repro.kge.eval import build_score_inputs
 
             split = "test" if self.score_split == "test" else "valid"
-            cached = build_score_inputs(
-                self.kgs[name], split=split, max_test=self.score_max_test
+            cached = (
+                version,
+                build_score_inputs(
+                    self.kgs[name], split=split, max_test=self.score_max_test
+                ),
             )
             self._lp_inputs[name] = cached
-        return cached
+        return cached[1]
 
     def _valid_accuracy(self, name: str) -> float:
         tr = self.trainers[name]
@@ -281,7 +326,9 @@ class FederationScheduler:
         passes the tick-start snapshot so serial and batched ticks read the
         same state); by default the client's live params are used.
         """
-        t0 = time.time()
+        # perf_counter: event timings must be monotonic (time.time() jumps
+        # with NTP/clock adjustments)
+        t0 = time.perf_counter()
         self.state[host] = NodeState.BUSY
         ent = self.registry.entities(client, host)
         rel = self.registry.relations(client, host)
@@ -355,7 +402,7 @@ class FederationScheduler:
         jax.block_until_ready(hos_tr.params)  # time executed work, not enqueue
         ev = FederationEvent(
             self._tick, host, client, "ppat", before, after, accepted,
-            epsilon=hist["epsilon"], seconds=time.time() - t0,
+            epsilon=hist["epsilon"], seconds=time.perf_counter() - t0,
         )
         self.events.append(ev)
         if accepted:
@@ -364,7 +411,7 @@ class FederationScheduler:
 
     def self_train_once(self, name: str) -> FederationEvent:
         """Alg. 1 ll. 23–27: local iterative training when the queue is empty."""
-        t0 = time.time()
+        t0 = time.perf_counter()
         tr = self.trainers[name]
         tr.train_epochs(self.update_epochs)
         before = self.best_score[name]
@@ -379,7 +426,7 @@ class FederationScheduler:
         jax.block_until_ready(tr.params)  # time executed work, not enqueue
         ev = FederationEvent(
             self._tick, name, None, "self-train", before, after, accepted,
-            seconds=time.time() - t0,
+            seconds=time.perf_counter() - t0,
         )
         self.events.append(ev)
         return ev
@@ -414,11 +461,13 @@ class FederationScheduler:
         *,
         self_train: bool = True,
         tick_impl: Optional[str] = None,
+        tick_placement: Optional[str] = None,
     ) -> Dict[str, float]:
         """Scheduler ticks until quiescence (all queues empty, no improvement)
         or ``max_ticks``. Each tick serves every Ready owner once, per the
-        tick-start plan. ``tick_impl`` ("batched" | "reference") overrides
-        the constructor/env-resolved engine for this run."""
+        tick-start plan. ``tick_impl`` ("batched" | "reference") and
+        ``tick_placement`` ("auto" | "single" | "sharded") override the
+        constructor/env-resolved engine and device placement for this run."""
         impl = resolve_tick_impl(
             tick_impl if tick_impl is not None else self.tick_impl
         )
@@ -439,7 +488,9 @@ class FederationScheduler:
             self._tick += 1
             plan = self.plan_tick(self_train=self_train)
             if impl == "batched" and plan:
-                events = self._tick_engine.execute(plan, self._tick)
+                events = self._tick_engine.execute(
+                    plan, self._tick, placement=tick_placement
+                )
             else:
                 events = [
                     self.federate_once(

@@ -9,9 +9,9 @@ in owner count and the device idled between handshakes.
 
 This engine turns the scheduler into a *planner*: at tick start it collects
 every Ready owner's pending work into a tick plan — (client → host)
-handshake pairs plus self-train owners — and executes the whole tick as ONE
-compiled program. Each plan entry contributes an independent subgraph that
-chains the full pipeline in-graph:
+handshake pairs plus self-train owners — and executes the whole tick on
+device with host syncs only at the tick boundary. Each plan entry is an
+independent program that chains the full pipeline in-graph:
 
     PPAT (init + all adversarial rounds) → synthesize + procrustes refine →
     KGEmb aggregation (entity/relation scatter) → virtual extension →
@@ -21,17 +21,36 @@ chains the full pipeline in-graph:
 Host-side work per tick shrinks to: splitting keys, the accept/reject
 decisions, snapshot/broadcast bookkeeping, and the moments accountant.
 
-Why independent subgraphs and not ``vmap``/``lax.map`` stacking: XLA
-recompiles a stacked body in a different fusion context, which drifts
-results by ~1 ulp — enough to (rarely) flip an accept/reject decision, and
-enough to break the bit-parity contract with the serial reference path. N
-copies of the same per-entry trace inside one program, however, compile to
-the same per-copy fusion as the standalone jitted calls (pinned by the tick
-parity tests), and XLA:CPU's thunk executor runs the independent subgraphs
-concurrently — measured ~1.5× on the scan stages alone on 2-core CI, on top
-of eliminating the per-owner eager-op and sync overhead that dominates the
-serial loop. On TPU/GPU the same program exposes the cross-owner
-parallelism to the compiler scheduler.
+**Trace-time program dedup.** Entries are grouped by signature — the static
+``EntrySpec`` plus the input pytree's shapes/dtypes (``entry_signature``) —
+and one program is traced and compiled per unique signature, not per owner:
+N equal-shaped owners (the paper's decentralized deployments are exactly
+this) compile ONE tick-entry program where the PR 3 whole-tick mega-program
+compiled N identical subgraph copies (~1 min one-time for 8 owners on CPU
+CI). All entry dispatches are asynchronous; the engine blocks once, at the
+end of the tick.
+
+**Multi-device placement** (``kernels.dispatch.resolve_tick_placement`` /
+``REPRO_TICK_PLACEMENT``): with ``placement="sharded"`` (the ``auto``
+default whenever >1 device is visible — on CPU CI via
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``) a signature bucket
+of equal-shaped owners is stacked along a leading owner axis and executed
+by one ``shard_map`` SPMD program over the ``("owners",)`` mesh
+(``core.distributed.owner_shard_map``) — one device per owner, still ONE
+compile per bucket; signature singletons are placed on the device selected
+by a stable hash of their signature, with a per-entry ``jax.device_put`` of
+their inputs (jit specializes per placement device underneath, and
+hash-stable placement keeps a compiled signature on its device no matter
+how the plan composition changes across ticks). ``placement="single"``
+keeps every entry program on the default device.
+
+Why per-entry programs / shard_map slices and not ``vmap``/``lax.map``
+stacking: XLA recompiles a stacked body in a different fusion context,
+which drifts results by ~1 ulp — enough to (rarely) flip an accept/reject
+decision, and enough to break the bit-parity contract with the serial
+reference path. The standalone entry program and the per-device shard_map
+body, however, compile the SAME unstacked per-entry trace the serial path
+jits (pinned by the tick parity tests at ≥4 simulated devices).
 
 Everything immutable is cached across ticks per (client, host) pair or per
 owner: aligned-index uploads, virtual-extension structure (neighbor ids,
@@ -237,43 +256,87 @@ def entry_graph(inp: Dict[str, jnp.ndarray], spec: EntrySpec) -> Dict:
     return out
 
 
-def _tick_graph(inputs: Tuple[Dict, ...], specs: Tuple[EntrySpec, ...]):
-    return tuple(entry_graph(i, s) for i, s in zip(inputs, specs))
-
-
-#: compiled tick programs, keyed by the tuple of entry specs (jit further
-#: specializes on input shapes — bucket padding keeps those stable, so
-#: steady-state federation reuses one program per plan signature). The cache
-#: is deliberately module-global with process lifetime, like jax.jit's own
+#: compiled per-entry programs, keyed by EntrySpec (jit further specializes
+#: on input shapes — bucket padding keeps those stable, so steady-state
+#: federation reuses one program per entry signature). The caches are
+#: deliberately module-global with process lifetime, like jax.jit's own
 #: compilation cache: schedulers over the same universe (parity tests, the
-#: tick benchmark's reference/batched pair) share programs instead of paying
-#: the multi-subgraph compile per instance.
-_PROGRAMS: Dict[Tuple[EntrySpec, ...], "jax.stages.Wrapped"] = {}
+#: tick benchmark's reference/batched/sharded trio) share programs instead
+#: of paying the compile per instance.
+_ENTRY_PROGRAMS: Dict[EntrySpec, "jax.stages.Wrapped"] = {}
+
+#: shard_map'ed group programs, keyed by (EntrySpec, group extent): one SPMD
+#: program serves a whole signature bucket of equal-shaped owners
+_GROUP_PROGRAMS: Dict[Tuple[EntrySpec, int], "jax.stages.Wrapped"] = {}
 
 
-def _tick_program(specs: Tuple[EntrySpec, ...]):
-    prog = _PROGRAMS.get(specs)
+def _entry_program(spec: EntrySpec):
+    prog = _ENTRY_PROGRAMS.get(spec)
     if prog is None:
-        prog = jax.jit(functools.partial(_tick_graph, specs=specs))
-        _PROGRAMS[specs] = prog
+        prog = jax.jit(functools.partial(entry_graph, spec=spec))
+        _ENTRY_PROGRAMS[spec] = prog
     return prog
 
 
+def _group_entry_graph(stacked: Dict, spec: EntrySpec) -> Dict:
+    """shard_map body: each mesh device holds a local extent-1 slice of the
+    stacked group inputs; dropping it runs the UNSTACKED entry graph — the
+    identical trace (hence identical fusion, hence identical bits) to the
+    single-entry program, unlike vmap/lax.map stacking (see module doc)."""
+    inp = jax.tree.map(lambda x: x[0], stacked)
+    out = entry_graph(inp, spec)
+    return jax.tree.map(lambda x: x[None], out)
+
+
+def _group_program(spec: EntrySpec, extent: int):
+    key = (spec, extent)
+    prog = _GROUP_PROGRAMS.get(key)
+    if prog is None:
+        from repro.core.distributed import owner_shard_map
+
+        prog = jax.jit(
+            owner_shard_map(
+                functools.partial(_group_entry_graph, spec=spec), extent
+            )
+        )
+        _GROUP_PROGRAMS[key] = prog
+    return prog
+
+
+def entry_signature(spec: EntrySpec, inp: Dict) -> Tuple:
+    """The trace-time dedup key: the static spec plus the input pytree's
+    structure/shapes/dtypes. Two plan entries with equal signatures are
+    served by ONE traced-and-compiled program — N equal-shaped owners cost
+    one compile, not N."""
+    leaves, treedef = jax.tree.flatten(inp)
+    return (
+        spec, treedef,
+        tuple((x.shape, str(jnp.result_type(x))) for x in leaves),
+    )
+
+
 def tick_program_cache_size() -> int:
-    """Number of compiled tick-program specializations — the tick-level
-    retrace-free invariant is asserted against this counter."""
-    return sum(p._cache_size() for p in _PROGRAMS.values())
+    """Number of compiled tick-entry program specializations (single-entry
+    and shard_map group programs together). Both tick-level invariants are
+    asserted against this counter: steady-state ticks must not retrace, and
+    N equal-shaped owners must compile exactly one program per unique entry
+    signature — not one per owner."""
+    progs = list(_ENTRY_PROGRAMS.values()) + list(_GROUP_PROGRAMS.values())
+    return sum(p._cache_size() for p in progs)
 
 
 # ---------------------------------------------------------------------------
 # the engine: per-scheduler caches + tick execution
 # ---------------------------------------------------------------------------
 class TickEngine:
-    """Executes a scheduler's tick plan as one batched device program.
+    """Executes a scheduler's tick plan as asynchronously dispatched,
+    signature-deduped entry programs (optionally placed across devices),
+    with one host sync per tick.
 
     Holds the cross-tick caches; everything cached is immutable for the
     scheduler's lifetime (KG splits, aligned index sets, virtual-extension
-    structure, padded triple stores, scoring inputs).
+    structure, padded triple stores) or version-keyed on the owner's
+    scoring universe (scoring inputs).
     """
 
     def __init__(self, sched):
@@ -379,12 +442,16 @@ class TickEngine:
 
     def _score_info(self, name: str) -> Dict:
         metric = self._metric_kind()
+        version = self.sched._score_universe(name)
         info = self._score.get(name)
-        if info is not None and info["metric"] == metric:
+        if info is not None and info["metric"] == metric \
+                and info["version"] == version:
             return info
-        # (re)build — also covers a score_fn swapped after a previous run
+        # (re)build — covers a score_fn swapped after a previous run AND an
+        # owner whose scoring universe changed (e.g. an accepted virtual
+        # extension that grew the entity table)
         sched = self.sched
-        info = {"metric": metric}
+        info = {"metric": metric, "version": version}
         if metric == "accuracy":
             va, va_neg = sched._accuracy_inputs(name)
             info["va"] = jnp.asarray(va, jnp.int32)
@@ -411,16 +478,98 @@ class TickEngine:
         return "none"
 
     # ---------------------------------------------------------- execution
-    def execute(self, entries: List, tick: int) -> List:
+    def _dispatch(
+        self, specs: List[EntrySpec], inputs: List[Dict], placement: str
+    ) -> List[Dict]:
+        """Launch every entry program asynchronously; returns per-entry
+        output pytrees (unmaterialized) in plan order.
+
+        ``single``: every entry runs its signature's program on the default
+        device. ``sharded``: entries are bucketed by signature; buckets are
+        cut into device-count chunks and each chunk runs as ONE shard_map
+        program over the owner mesh (one owner per device), while signature
+        singletons are placed by a stable hash of their signature — the
+        device a SINGLETON lands on never depends on what else the tick's
+        plan contains, so plan-composition changes (drained queues, mixed
+        self-train ticks) cannot re-place a compiled singleton signature
+        onto a new device and trigger an avoidable per-device recompile.
+        Group programs are compiled per (signature, chunk extent): a bucket
+        shrinking from 8 to 7 owners compiles a new extent once — bounded
+        by the device count per signature and amortized in steady state
+        (the whole-tick mega-program this engine replaced recompiled EVERY
+        subgraph on any plan change); extent-canonical chunking is the
+        ROADMAP follow-up."""
+        outs: List[Optional[Dict]] = [None] * len(specs)
+        if placement == "single":
+            for i, (spec, inp) in enumerate(zip(specs, inputs)):
+                outs[i] = _entry_program(spec)(inp)
+            return outs
+
+        from repro.core.distributed import owner_sharding
+
+        buckets: Dict[Tuple, List[int]] = {}
+        for i, (spec, inp) in enumerate(zip(specs, inputs)):
+            buckets.setdefault(entry_signature(spec, inp), []).append(i)
+        devices = jax.devices()
+        for sig, idxs in buckets.items():
+            spec = specs[idxs[0]]
+            for pos in range(0, len(idxs), len(devices)):
+                chunk = idxs[pos : pos + len(devices)]
+                if len(chunk) == 1:
+                    i = chunk[0]
+                    # signature-stable placement (process-local hash is
+                    # fine: programs don't outlive the process). Distinct
+                    # signatures may collide on one device — load balance
+                    # traded for compile stability.
+                    dev = devices[hash(sig) % len(devices)]
+                    outs[i] = _entry_program(spec)(
+                        jax.device_put(inputs[i], dev)
+                    )
+                    continue
+                # one SPMD program for the whole chunk: stack each input
+                # leaf along a leading owner axis and shard that axis over
+                # the owner mesh. Leaves are normalized onto the default
+                # device first — after a previous sharded tick an owner's
+                # params live on its last device, and jnp.stack refuses
+                # mixed commitments. (Direct per-shard assembly is the
+                # follow-up; on CPU CI the extra hop is free.)
+                stacked = jax.tree.map(
+                    lambda *xs: jnp.stack(
+                        [jax.device_put(x, devices[0]) for x in xs]
+                    ),
+                    *[inputs[i] for i in chunk],
+                )
+                stacked = jax.device_put(stacked, owner_sharding(len(chunk)))
+                out = _group_program(spec, len(chunk))(stacked)
+                for k, i in enumerate(chunk):
+                    outs[i] = jax.tree.map(lambda x, _k=k: x[_k], out)
+        # normalize results onto the default device: accepted params flow
+        # back into trainer state, and leaving them committed to their
+        # placement device would blow up the next non-sharded consumer
+        # (placement="single", tick_impl="reference", user eager access)
+        # with mixed-commitment errors. Owner-sticky placement that keeps
+        # params resident per device is the ROADMAP follow-up.
+        return jax.device_put(outs, devices[0])
+
+    def execute(
+        self, entries: List, tick: int, *, placement: Optional[str] = None
+    ) -> List:
         """Run one planned tick batched; returns the FederationEvents, in
         plan order, with protocol side effects (accept/reject, snapshot,
         broadcast, ε accounting) applied exactly as the serial path does."""
         from repro.core.federation import FederationEvent, NodeState
         from repro.kge.eval import _metrics, best_threshold_accuracy
-        from repro.kernels.dispatch import resolve_interpret, resolve_train_impl
+        from repro.kernels.dispatch import (
+            resolve_interpret,
+            resolve_tick_placement,
+            resolve_train_impl,
+        )
 
         sched = self.sched
-        t0 = time.time()
+        placement = resolve_tick_placement(
+            placement if placement is not None else sched.tick_placement
+        )
+        t0 = time.perf_counter()
         impls = {
             e.host: resolve_train_impl(None, sched.trainers[e.host].model.family)
             for e in entries
@@ -501,9 +650,11 @@ class TickEngine:
             specs.append(EntrySpec(**kw))
             inputs.append(inp)
 
-        outs = _tick_program(tuple(specs))(tuple(inputs))
+        outs = self._dispatch(specs, inputs, placement)
         outs = jax.block_until_ready(outs)
-        seconds = time.time() - t0  # honest: outputs are materialized
+        # honest AND monotonic: outputs are materialized, and perf_counter
+        # is immune to wall-clock adjustments (time.time() is not)
+        seconds = time.perf_counter() - t0
 
         events = []
         for e, spec, out in zip(entries, specs, outs):

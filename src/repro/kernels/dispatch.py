@@ -110,6 +110,32 @@ def resolve_tick_impl(impl: Optional[str] = None, family: str = "transe") -> str
     return impl
 
 
+def resolve_tick_placement(placement: Optional[str] = None) -> str:
+    """Pick where the batched tick engine places its entry programs:
+    ``single`` (every entry on the default device) or ``sharded`` (signature
+    buckets shard_map'ed across ``jax.devices()``, singletons placed by a
+    stable signature hash).
+
+    ``auto`` (the default) resolves to ``sharded`` exactly when more than one
+    device is visible — on CPU CI that means
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` turns sharding on
+    without touching call sites. ``REPRO_TICK_PLACEMENT`` overrides.
+    """
+    if placement is None:
+        placement = (
+            os.environ.get("REPRO_TICK_PLACEMENT", "").strip().lower() or None
+        )
+    if placement is None:
+        placement = "auto"
+    if placement == "auto":
+        placement = "sharded" if len(jax.devices()) > 1 else "single"
+    if placement not in ("single", "sharded"):
+        raise ValueError(
+            f"unknown tick placement {placement!r} (auto|single|sharded)"
+        )
+    return placement
+
+
 def resolve_rank_impl(impl: Optional[str] = None) -> str:
     """Pick the fused-rank engine implementation: ``pallas`` or ``xla``.
 

@@ -192,6 +192,52 @@ def synthesize_universe(
     return kgs
 
 
+def equal_shape_universe(
+    n_owners: int = 8,
+    *,
+    entities: int = 160,
+    relations: int = 8,
+    triples: int = 1300,
+    shared: int = 40,
+    seed: int = 0,
+) -> Dict[str, KG]:
+    """N structurally IDENTICAL KG owners: every owner has the same entity /
+    relation / triple-store / split extents, and every pair shares the same
+    ``shared`` aligned entities (universe ids 0..shared-1, occupying the same
+    local slots in every owner).
+
+    ``synthesize_universe`` deduplicates generated triples, so even owners
+    built from identical stats end up a few triples apart — enough to change
+    padded store shapes. This builder pins shapes exactly: it is the
+    deployment the paper scales to (N symmetric KG processes) and the shape
+    the tick engine's trace-time program dedup targets — all N owners share
+    ONE compiled tick-entry program per tick kind.
+    """
+    kgs: Dict[str, KG] = {}
+    private = entities - shared
+    if private < 0:
+        raise ValueError("shared aligned block exceeds the entity count")
+    for i in range(n_owners):
+        rng = np.random.default_rng(seed + 7919 * i)
+        h = rng.integers(0, entities, triples)
+        r = rng.integers(0, relations, triples)
+        t = (h + 1 + rng.integers(0, entities - 1, triples)) % entities
+        tri = np.stack([h, r, t], axis=1).astype(np.int32)
+        ids = np.concatenate(
+            [np.arange(shared), shared + i * private + np.arange(private)]
+        ).astype(np.int64)
+        kg = KG(
+            name=f"K{i}",
+            num_entities=entities,
+            num_relations=relations,
+            triples=tri,
+            universe_ids=ids,
+        )
+        kg.split(rng)
+        kgs[kg.name] = kg
+    return kgs
+
+
 def corrupt_triples(
     rng: np.random.Generator, triples: np.ndarray, num_entities: int
 ) -> np.ndarray:

@@ -51,7 +51,7 @@ def dryrun_one(
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
-    t0 = time.time()
+    t0 = time.perf_counter()
     wl = make_workload(cfg, shape_name, mesh, multi_pod=multi_pod)
     with mesh:
         lowered = jax.jit(
@@ -59,10 +59,10 @@ def dryrun_one(
             in_shardings=wl["in_shardings"],
             out_shardings=wl["out_shardings"],
         ).lower(*wl["args"])
-        t_lower = time.time() - t0
-        t0 = time.time()
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+        t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
     cost = cost_analysis_dict(compiled)

@@ -50,15 +50,15 @@ def main() -> None:
         kw["patches"] = jnp.zeros((args.batch, cfg.num_patches, cfg.d_model),
                                   jnp.dtype(cfg.dtype))
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     pf = jax.jit(lambda p, t, c: prefill(p, cfg, t, c, **kw))
     logits, cache = pf(params, jnp.asarray(prompts), cache)
-    t_prefill = time.time() - t0
+    t_prefill = time.perf_counter() - t0
 
     dec = jax.jit(lambda p, tok, c, pos: decode_step(p, cfg, tok, c, pos))
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
     generated = [tok]
-    t0 = time.time()
+    t0 = time.perf_counter()
     offset = cfg.num_patches  # visual prefix occupies the cache head
     for i in range(args.gen - 1):
         logits, cache = dec(params, tok, cache, jnp.int32(offset + args.prompt_len + i))
@@ -70,7 +70,7 @@ def main() -> None:
             tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         generated.append(tok)
     gen = np.concatenate([np.asarray(g) for g in generated], axis=1)
-    t_decode = time.time() - t0
+    t_decode = time.perf_counter() - t0
     print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
     print(f"prefill {t_prefill*1e3:.1f} ms; decode {t_decode*1e3/max(1,args.gen-1):.1f} ms/token")
     for i in range(min(2, args.batch)):

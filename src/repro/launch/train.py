@@ -77,7 +77,7 @@ def main() -> None:
             )
         return out
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     losses = []
     for i, batch in enumerate(
         make_batches(ds, batch=args.batch, seq_len=args.seq_len, steps=args.steps)
@@ -87,8 +87,8 @@ def main() -> None:
         state, metrics = step(state, b)
         losses.append(float(metrics["loss"]))
         if (i + 1) % args.log_every == 0:
-            rate = args.batch * args.seq_len * args.log_every / (time.time() - t0)
-            t0 = time.time()
+            rate = args.batch * args.seq_len * args.log_every / (time.perf_counter() - t0)
+            t0 = time.perf_counter()
             print(f"step {i+1:5d} loss={losses[-1]:.4f} "
                   f"lr={float(metrics['lr']):.2e} tok/s={rate:,.0f}")
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")

@@ -1,0 +1,42 @@
+"""Repo-hygiene guards: generated artifacts must never be tracked.
+
+PR 3 accidentally shipped 12 ``__pycache__/*.pyc`` files; this pins the
+cleanup — bytecode and pytest caches are ignored and a tracked one fails
+tier-1 (and the ``make check-hygiene`` target) immediately.
+"""
+import os
+import subprocess
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _git_ls_files():
+    try:
+        r = subprocess.run(
+            ["git", "ls-files"], cwd=REPO, capture_output=True, text=True,
+            timeout=60,
+        )
+    except (OSError, subprocess.TimeoutExpired):
+        pytest.skip("git unavailable")
+    if r.returncode != 0:
+        pytest.skip("not a git checkout")
+    return r.stdout.splitlines()
+
+
+def test_no_tracked_bytecode():
+    bad = [
+        f for f in _git_ls_files()
+        if f.endswith((".pyc", ".pyo"))
+        or "__pycache__" in f
+        or ".pytest_cache" in f
+    ]
+    assert not bad, f"generated files are tracked in git: {bad}"
+
+
+def test_gitignore_covers_bytecode():
+    with open(os.path.join(REPO, ".gitignore")) as f:
+        rules = {line.strip() for line in f if line.strip()}
+    for rule in ("__pycache__/", "*.pyc", ".pytest_cache/"):
+        assert rule in rules, f".gitignore is missing {rule!r}"

@@ -10,8 +10,8 @@ import pytest
 from repro.core.federation import FederationScheduler, NodeState, TickEntry
 from repro.core.ppat import PPATConfig
 from repro.core.tick_engine import tick_program_cache_size
-from repro.kernels.dispatch import resolve_tick_impl
-from repro.kge.data import synthesize_universe
+from repro.kernels.dispatch import resolve_tick_impl, resolve_tick_placement
+from repro.kge.data import equal_shape_universe, synthesize_universe
 from repro.kge.engine import (
     _train_scan,
     pad_tables,
@@ -107,18 +107,23 @@ def test_tick_parity_custom_score_fn(universe):
 
 
 def test_tick_program_reused_across_ticks(universe):
-    """Steady-state federation reuses the compiled tick program: ticks with
-    the same plan signature (same entry specs + bucket-padded shapes) must
-    not recompile."""
+    """Steady-state federation reuses the compiled tick-entry programs:
+    ticks whose entry signatures (spec + bucket-padded shapes) were seen
+    before must not recompile."""
     fed = _make(universe)
     fed.initial_training()
-    fed.run(max_ticks=1, tick_impl="batched")  # warm-up: compiles
+    # warm-up: each owner has 2 partners, so 2 ticks rotate through every
+    # (client, host) pair signature; a drained-queue tick compiles the
+    # self-train signatures
+    fed.run(max_ticks=2, tick_impl="batched")
+    for name in universe:
+        fed.queue[name].clear()
+        fed._queued[name].clear()
+    fed.run(max_ticks=1, tick_impl="batched")
     n = tick_program_cache_size()
     fed.run(max_ticks=2, tick_impl="batched")
-    # every owner has 2 partners: ticks 2-3 pop the remaining offers, so the
-    # all-handshake plan signature repeats; shapes are bucket-stable
     assert tick_program_cache_size() == n, (
-        "batched tick recompiled despite unchanged plan signature"
+        "batched tick recompiled despite unchanged entry signatures"
     )
 
 
@@ -176,6 +181,100 @@ def test_batched_tick_rejects_reference_train_impl(universe, monkeypatch):
         assert fed.state[n] is not NodeState.BUSY
         # the error fires before the plan pops any offers
         assert list(fed.queue[n]) == queues_before[n]
+
+
+def test_equal_shaped_owners_share_one_entry_program():
+    """Trace-time program dedup: N equal-shaped owners must compile exactly
+    ONE tick-entry program per tick kind (per unique entry signature), not
+    one per owner — the multi-device version of this claim (8 owners, 8
+    simulated devices, shard_map buckets) is pinned by
+    ``tests/test_tick_sharded.py``."""
+    kgs = equal_shape_universe(
+        4, entities=120, relations=6, triples=800, shared=32, seed=3
+    )
+    fed = FederationScheduler(
+        kgs, dim=16, ppat_cfg=PPATConfig(steps=4, seed=0), local_epochs=2,
+        update_epochs=2, seed=0, use_virtual=False, score_max_test=24,
+    )
+    fed.initial_training()
+    before = tick_program_cache_size()
+    # tick 1: every owner hosts one handshake — 4 equal-shaped ppat entries.
+    # Placement is pinned to "single" so the exact program counts hold under
+    # any forced host-device count (sharded would chunk the bucket by device
+    # count); the sharded dedup claim is pinned by tests/test_tick_sharded.py.
+    fed.run(max_ticks=1, tick_impl="batched", tick_placement="single")
+    assert tick_program_cache_size() == before + 1
+    # an all-self-train tick adds exactly one more program (new entry kind)
+    for n in kgs:
+        fed.queue[n].clear()
+        fed._queued[n].clear()
+    fed.run(max_ticks=1, tick_impl="batched", tick_placement="single")
+    assert tick_program_cache_size() == before + 2
+
+
+def test_score_inputs_invalidated_by_accepted_extension(universe):
+    """Regression: the per-owner backtrack-score caches must be rebuilt when
+    an accepted virtual extension grows the owner's embedding universe —
+    fixed negatives / CSR filters built pre-accept must not be served against
+    the post-accept tables."""
+    import jax.numpy as jnp
+
+    fed = _make(universe)
+    fed.initial_training()
+    name = next(iter(universe))
+    tr = fed.trainers[name]
+    e0 = tr.model.num_entities
+    va0, neg0 = fed._accuracy_inputs(name)
+    lp0 = fed._hit10_inputs(name)
+    info0 = fed._tick_engine._score_info(name)
+
+    # accept a virtual extension into the owner's live tables: the entity /
+    # relation universe grows and stays grown across the next scoring call
+    dim = tr.model.dim
+    extra = np.array([[e0, tr.model.num_relations, 0]], np.int64)
+    tr.extend_tables(
+        0.01 * jnp.ones((3, dim)), 0.01 * jnp.ones((1, dim)), extra
+    )
+    assert tr.model.num_entities == e0 + 3
+
+    va1, neg1 = fed._accuracy_inputs(name)
+    np.testing.assert_array_equal(va0, va1)  # positives: unchanged split
+    # negatives are REdrawn against the extended universe
+    assert not np.array_equal(neg0, neg1)
+    assert neg1[:, [0, 2]].max() < e0 + 3
+    # hit@10 CSR filters are universe-extent independent (appended virtual
+    # ids invalidate nothing) — the expensive rebuild must NOT fire
+    assert fed._hit10_inputs(name) is lp0
+    assert fed._tick_engine._score_info(name) is not info0
+    # both metrics score the extended universe without stale-shape failures
+    assert 0.0 <= fed._valid_accuracy(name) <= 1.0
+    assert 0.0 <= fed._valid_hit10(name) <= 1.0
+
+    # stripping the extension reverts the version: the rebuilt negatives are
+    # bit-identical to the originals (fixed sampling seed)
+    tr.strip_virtual()
+    va2, neg2 = fed._accuracy_inputs(name)
+    np.testing.assert_array_equal(neg0, neg2)
+    np.testing.assert_array_equal(va0, va2)
+
+
+def test_resolve_tick_placement(monkeypatch):
+    """Placement resolution: explicit wins, then REPRO_TICK_PLACEMENT, then
+    auto by visible device count (sharded iff >1 device, so the suite also
+    passes under a forced multi-device XLA_FLAGS)."""
+    auto = "sharded" if len(jax.devices()) > 1 else "single"
+    assert resolve_tick_placement("single") == "single"
+    assert resolve_tick_placement("sharded") == "sharded"
+    assert resolve_tick_placement("auto") == auto
+    assert resolve_tick_placement(None) == auto
+    monkeypatch.setenv("REPRO_TICK_PLACEMENT", "sharded")
+    assert resolve_tick_placement(None) == "sharded"
+    assert resolve_tick_placement("single") == "single"  # explicit beats env
+    monkeypatch.setenv("REPRO_TICK_PLACEMENT", "auto")
+    assert resolve_tick_placement(None) == auto
+    monkeypatch.delenv("REPRO_TICK_PLACEMENT")
+    with pytest.raises(ValueError):
+        resolve_tick_placement("nope")
 
 
 def test_resolve_tick_impl(monkeypatch):
