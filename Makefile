@@ -1,16 +1,26 @@
 PY := PYTHONPATH=src python
 
-.PHONY: tier1 test check-hygiene bench-eval bench-train bench-tick bench bench-json
+.PHONY: tier1 test check-hygiene bench-eval bench-train bench-tick bench \
+	bench-json bench-smoke
 
-# CI gate: repo hygiene, the full suite, then the engine parity tests
-# explicitly (they are the acceptance bars for the streaming fused-rank eval
-# engine, the device-resident training engine, and the batched federation
-# tick engine).
+# CI gate: repo hygiene, the full suite, the engine parity tests explicitly
+# (they are the acceptance bars for the streaming fused-rank eval engine, the
+# device-resident training engine, and the batched federation tick engine),
+# then every bench suite at smoke extents so bench code paths can't rot.
 tier1: check-hygiene
 	$(PY) -m pytest -x -q
 	$(PY) -m pytest -q tests/test_eval_engine.py -k "parity"
 	$(PY) -m pytest -q tests/test_train_engine.py -k "parity or retrace"
 	$(PY) -m pytest -q tests/test_tick_engine.py -k "parity or reused"
+	$(MAKE) bench-smoke
+
+# every registered bench suite at tiny extents (N=2 owners, E ≤ 1k,
+# single-digit epochs): exercises the bench code paths — including the
+# sharded tick rows (2 forced host devices) and the in-bench parity asserts
+# — as a tier-1 gate. Smoke numbers are not measurements; run.py refuses to
+# write BENCH_*.json from a smoke run.
+bench-smoke:
+	XLA_FLAGS="--xla_force_host_platform_device_count=2" PYTHONPATH=src:. python benchmarks/run.py --smoke
 
 # fail if generated artifacts (bytecode, pytest caches) are ever tracked
 # again — PR 3 accidentally shipped 12 __pycache__/*.pyc files
@@ -41,10 +51,11 @@ bench:
 	PYTHONPATH=src:. python benchmarks/run.py
 
 # same, plus machine-readable BENCH_<suite>.json artifacts at the repo root
-# (the committed perf trajectory). Runs single-device on purpose — the
-# committed baselines track the plain CPU-CI environment; the sharded tick
-# rows record their device count in tick_engine.sharded_devices.* so a
-# baseline regenerated under a different device count diffs loudly. The
-# multi-device sharded measurement lives in `make bench-tick`.
+# (the committed perf trajectory). Forces 8 host devices — the sharded tick
+# baseline must measure real multi-device placement, and every artifact
+# records the actual environment in its _env.device_count row (plus
+# tick_engine.sharded_devices.*) so a baseline regenerated under a
+# different device count diffs loudly. (The previous single-device default
+# silently produced a sharded row with sharded_devices=1.)
 bench-json:
-	PYTHONPATH=src:. python benchmarks/run.py --json
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" PYTHONPATH=src:. python benchmarks/run.py --json

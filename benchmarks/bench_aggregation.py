@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit, small_universe
+from benchmarks.common import emit, pick, small_universe
 from repro.core.federation import FederationScheduler
 from repro.core.ppat import PPATConfig
 from repro.kge.eval import triple_classification_accuracy
@@ -11,14 +11,15 @@ from repro.kge.eval import triple_classification_accuracy
 
 def main() -> None:
     for label, use_virtual in (("fkge_simple", False), ("fkge", True)):
-        kgs = small_universe(seed=0)
+        kgs = small_universe(seed=0, n=pick(3, 2))
         t0 = time.perf_counter()
         fed = FederationScheduler(
-            kgs, dim=32, ppat_cfg=PPATConfig(steps=120, seed=0),
-            use_virtual=use_virtual, local_epochs=150, update_epochs=40, seed=0,
+            kgs, dim=pick(32, 16), ppat_cfg=PPATConfig(steps=pick(120, 6), seed=0),
+            use_virtual=use_virtual, local_epochs=pick(150, 2),
+            update_epochs=pick(40, 2), seed=0,
         )
         fed.initial_training()
-        fed.run(max_ticks=3)
+        fed.run(max_ticks=pick(3, 1))
         dt = (time.perf_counter() - t0) * 1e6
         accs = {
             n: triple_classification_accuracy(

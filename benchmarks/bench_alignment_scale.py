@@ -6,7 +6,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, small_universe
+from benchmarks.common import emit, pick, small_universe
 from repro.core.alignment import AlignmentRegistry
 from repro.core.federation import FederationScheduler
 from repro.core.ppat import PPATConfig
@@ -14,7 +14,7 @@ from repro.kge.eval import triple_classification_accuracy
 
 
 def main() -> None:
-    base = small_universe(seed=0, n=3)
+    base = small_universe(seed=0, n=pick(3, 2))
     rng = np.random.default_rng(0)
     full_reg = AlignmentRegistry.from_kgs(base)
     names = list(base)
@@ -36,11 +36,13 @@ def main() -> None:
         # score_split="test" (Alg. 1 verbatim) so time-0 and final scores are
         # on the SAME split/negatives — gains are then comparable.
         fed = FederationScheduler(
-            base, dim=32, registry=reg, ppat_cfg=PPATConfig(steps=120, seed=0),
-            local_epochs=150, update_epochs=40, seed=0, score_split="test",
+            base, dim=pick(32, 16), registry=reg,
+            ppat_cfg=PPATConfig(steps=pick(120, 6), seed=0),
+            local_epochs=pick(150, 2), update_epochs=pick(40, 2), seed=0,
+            score_split="test",
         )
         init = fed.initial_training()
-        final = fed.run(max_ticks=2)
+        final = fed.run(max_ticks=pick(2, 1))
         dt = (time.perf_counter() - t0) * 1e6
         gains = [final[n] - init[n] for n in names]
         emit(

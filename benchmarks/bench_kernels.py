@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, pick, timed
 
 
 def main() -> None:
@@ -15,46 +15,52 @@ def main() -> None:
     # flash attention
     from repro.kernels.flash_attention import attention_ref, flash_attention
 
-    q = jax.random.normal(key, (2, 4, 256, 64))
-    k = jax.random.normal(jax.random.PRNGKey(1), (2, 2, 256, 64))
-    v = jax.random.normal(jax.random.PRNGKey(2), (2, 2, 256, 64))
-    out, _ = timed(lambda: np.asarray(flash_attention(q, k, v, block_q=128, block_k=128)))
+    s, bq = pick((2, 4, 256, 64), (1, 2, 128, 32)), pick(128, 64)
+    q = jax.random.normal(key, s)
+    k = jax.random.normal(jax.random.PRNGKey(1), (s[0], s[1] // 2, s[2], s[3]))
+    v = jax.random.normal(jax.random.PRNGKey(2), (s[0], s[1] // 2, s[2], s[3]))
+    out, _ = timed(lambda: np.asarray(flash_attention(q, k, v, block_q=bq, block_k=bq)))
     ref, dt = timed(lambda: np.asarray(attention_ref(q, k, v)), repeats=3)
     err = float(np.abs(out - ref).max())
-    emit("kernel.flash_attention", dt, f"max_err={err:.2e};shape=2x4x256x64")
+    emit("kernel.flash_attention", dt,
+         f"max_err={err:.2e};shape={'x'.join(map(str, s))}")
 
     # triple score
     from repro.kernels.triple_score import pairwise_scores, pairwise_scores_ref
 
-    qq = jax.random.normal(key, (64, 100))
-    ent = jax.random.normal(jax.random.PRNGKey(3), (2048, 100))
+    qq = jax.random.normal(key, (pick(64, 16), 100))
+    ent = jax.random.normal(jax.random.PRNGKey(3), (pick(2048, 256), 100))
     out, _ = timed(lambda: np.asarray(pairwise_scores(qq, ent)))
     ref, dt = timed(lambda: np.asarray(pairwise_scores_ref(qq, ent)), repeats=3)
     emit("kernel.triple_score", dt,
-         f"max_err={float(np.abs(out-ref).max()):.2e};shape=64x2048x100")
+         f"max_err={float(np.abs(out-ref).max()):.2e};"
+         f"shape={qq.shape[0]}x{ent.shape[0]}x100")
 
     # csls
     from repro.kernels.csls import csls_matrix, csls_matrix_ref
 
-    a = jax.random.normal(key, (256, 64))
-    b = jax.random.normal(jax.random.PRNGKey(4), (256, 64))
+    a = jax.random.normal(key, (pick(256, 64), 64))
+    b = jax.random.normal(jax.random.PRNGKey(4), (pick(256, 64), 64))
     out, _ = timed(lambda: np.asarray(csls_matrix(a, b)))
     ref, dt = timed(lambda: np.asarray(csls_matrix_ref(a, b)), repeats=3)
-    emit("kernel.csls", dt, f"max_err={float(np.abs(out-ref).max()):.2e};shape=256x256x64")
+    emit("kernel.csls", dt,
+         f"max_err={float(np.abs(out-ref).max()):.2e};"
+         f"shape={a.shape[0]}x{b.shape[0]}x64")
 
     # ssd
     from repro.kernels.ssd_scan import ssd_chunk_kernel_apply
     from repro.models.ssm import ssd
 
-    x = jax.random.normal(key, (2, 256, 4, 32))
-    dtt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(5), (2, 256, 4)))
+    t = pick(256, 128)
+    x = jax.random.normal(key, (2, t, 4, 32))
+    dtt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(5), (2, t, 4)))
     aa = -jnp.exp(jax.random.normal(jax.random.PRNGKey(6), (4,)) * 0.2)
-    bm = jax.random.normal(jax.random.PRNGKey(7), (2, 256, 1, 32)) * 0.3
-    cm = jax.random.normal(jax.random.PRNGKey(8), (2, 256, 1, 32)) * 0.3
+    bm = jax.random.normal(jax.random.PRNGKey(7), (2, t, 1, 32)) * 0.3
+    cm = jax.random.normal(jax.random.PRNGKey(8), (2, t, 1, 32)) * 0.3
     (yk, sk), _ = timed(lambda: jax.tree.map(np.asarray, ssd_chunk_kernel_apply(x, dtt, aa, bm, cm, chunk=64)))
     (yr, sr), dt = timed(lambda: jax.tree.map(np.asarray, ssd(x, dtt, aa, bm, cm, 64)), repeats=3)
     emit("kernel.ssd_scan", dt,
-         f"max_err={float(np.abs(yk-yr).max()):.2e};shape=2x256x4x32")
+         f"max_err={float(np.abs(yk-yr).max()):.2e};shape=2x{t}x4x32")
 
 
 if __name__ == "__main__":

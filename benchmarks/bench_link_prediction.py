@@ -6,7 +6,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, small_universe
+from benchmarks.common import emit, pick, small_universe
 from repro.core.federation import FederationScheduler
 from repro.core.ppat import PPATConfig
 from repro.kge.eval import link_prediction
@@ -14,15 +14,15 @@ from repro.kge.trainer import KGETrainer
 
 
 def main() -> None:
-    kgs = small_universe(seed=0)
+    kgs = small_universe(seed=0, n=pick(3, 2))
 
     # the streaming fused-rank engine made full-split eval affordable — no
     # more max_test=150 subsampling (seed-path wall-clock limit)
-    max_test = 2000
+    max_test = pick(2000, 16)
 
     for name, kg in kgs.items():
-        tr = KGETrainer(kg, "transe", dim=32, seed=0, margin=2.0)
-        tr.train_epochs(270)
+        tr = KGETrainer(kg, "transe", dim=pick(32, 16), seed=0, margin=2.0)
+        tr.train_epochs(pick(270, 2))
         t0 = time.perf_counter()
         lp = link_prediction(tr.params, tr.model, kg, max_test=max_test)
         dt = (time.perf_counter() - t0) * 1e6
@@ -33,11 +33,11 @@ def main() -> None:
         )
 
     fed = FederationScheduler(
-        kgs, dim=32, ppat_cfg=PPATConfig(steps=120, seed=0),
-        local_epochs=150, update_epochs=40, seed=0,
+        kgs, dim=pick(32, 16), ppat_cfg=PPATConfig(steps=pick(120, 6), seed=0),
+        local_epochs=pick(150, 2), update_epochs=pick(40, 2), seed=0,
     )
     fed.initial_training()
-    fed.run(max_ticks=3)
+    fed.run(max_ticks=pick(3, 1))
     for name, kg in kgs.items():
         t0 = time.perf_counter()
         lp = link_prediction(fed.trainers[name].params, fed.trainers[name].model,

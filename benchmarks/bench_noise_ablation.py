@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit, small_universe
+from benchmarks.common import emit, pick, small_universe
 from repro.core.federation import FederationScheduler
 from repro.core.ppat import PPATConfig
 from repro.kge.eval import triple_classification_accuracy
@@ -16,11 +16,12 @@ def main() -> None:
         kgs = small_universe(seed=0, n=2)
         t0 = time.perf_counter()
         fed = FederationScheduler(
-            kgs, dim=32, ppat_cfg=PPATConfig(steps=120, lam=lam, seed=0),
-            local_epochs=150, update_epochs=40, seed=0,
+            kgs, dim=pick(32, 16),
+            ppat_cfg=PPATConfig(steps=pick(120, 6), lam=lam, seed=0),
+            local_epochs=pick(150, 2), update_epochs=pick(40, 2), seed=0,
         )
         fed.initial_training()
-        fed.run(max_ticks=2)
+        fed.run(max_ticks=pick(2, 1))
         dt = (time.perf_counter() - t0) * 1e6
         accs = {
             n: triple_classification_accuracy(

@@ -6,7 +6,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, pick
 from repro.core.privacy import MomentsAccountant
 
 
@@ -23,7 +23,7 @@ def main() -> None:
     acc = MomentsAccountant(lam=0.05, delta=1e-5)
     rng = np.random.default_rng(0)
     queries = 0
-    for _ in range(50):  # 50 PATE batches of 32 queries
+    for _ in range(pick(50, 5)):  # PATE batches of 32 queries
         n1 = rng.integers(0, 5, 32)
         acc.update(4 - n1, n1)
         queries += 32
@@ -35,7 +35,7 @@ def main() -> None:
     acc2 = MomentsAccountant(lam=0.05, delta=1e-5)
     acc2.update(4, 0)
     e1 = acc2.epsilon()
-    for _ in range(100):
+    for _ in range(pick(100, 10)):
         acc2.update(4, 0)
     emit("privacy.monotonicity", 0.0,
          f"eps_1q={e1:.3f};eps_101q={acc2.epsilon():.3f};monotone={acc2.epsilon()>=e1}")

@@ -4,16 +4,18 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit, small_universe
+from benchmarks.common import emit, pick, small_universe
 from repro.core.federation import FederationScheduler
 from repro.core.ppat import PPATConfig
 from repro.kge.eval import triple_classification_accuracy
 from repro.kge.trainer import KGETrainer
 
 
-def run(*, mixed_models: bool = False, ticks: int = 3) -> None:
+def run(*, mixed_models: bool = False, ticks: int = None) -> None:
+    ticks = pick(3, 1) if ticks is None else ticks
+    local, update = pick(150, 2), pick(40, 2)
     tag = "fig5_multi" if mixed_models else "fig4_transe"
-    kgs = small_universe(seed=0)
+    kgs = small_universe(seed=0, n=pick(3, 2))
     fams = (
         {n: f for n, f in zip(kgs, ["transr", "transd", "transe"])}
         if mixed_models
@@ -23,15 +25,16 @@ def run(*, mixed_models: bool = False, ticks: int = 3) -> None:
     # --- independent baseline (same budget: local training only) ---------
     base_acc = {}
     for i, (name, kg) in enumerate(kgs.items()):
-        tr = KGETrainer(kg, fams[name], dim=32, seed=i, margin=2.0)
-        tr.train_epochs(150 + ticks * 40)  # same epoch budget as federated
+        tr = KGETrainer(kg, fams[name], dim=pick(32, 16), seed=i, margin=2.0)
+        tr.train_epochs(local + ticks * update)  # same epoch budget as federated
         base_acc[name] = triple_classification_accuracy(tr.params, tr.model, kg)
 
     # --- FKGE (paper protocol: Alg. 1 backtracks on test) ------------------
     t0 = time.perf_counter()
     fed = FederationScheduler(
-        kgs, families=fams, dim=32, ppat_cfg=PPATConfig(steps=120, seed=0),
-        local_epochs=150, update_epochs=40, seed=0, score_split="test",
+        kgs, families=fams, dim=pick(32, 16),
+        ppat_cfg=PPATConfig(steps=pick(120, 6), seed=0),
+        local_epochs=local, update_epochs=update, seed=0, score_split="test",
     )
     init = fed.initial_training()  # "time 0" of Fig. 4/5
     final = fed.run(max_ticks=ticks)

@@ -14,6 +14,25 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 RECORDED: Dict[str, float] = {}
 
 
+def smoke() -> bool:
+    """True when ``REPRO_BENCH_SMOKE`` asks for tiny-extent runs: every
+    registered suite shrinks its default extents (N=2 owners, E ≤ 1k,
+    single-digit epochs/steps) so the whole registry executes in CI time as
+    a tier-1 gate — the bench CODE PATHS (parity asserts included) are
+    exercised every run instead of rotting between full bench sessions.
+    Smoke numbers are meaningless as measurements and must never be written
+    into the committed ``BENCH_*.json`` baselines (``run.py`` refuses)."""
+    return os.environ.get("REPRO_BENCH_SMOKE", "").strip().lower() in (
+        "1", "true", "yes", "on"
+    )
+
+
+def pick(full, tiny):
+    """``tiny`` under ``REPRO_BENCH_SMOKE``, else ``full`` — the one-liner
+    suites use to shrink their default extents."""
+    return tiny if smoke() else full
+
+
 def emit(name: str, us_per_call: float, derived: str) -> None:
     """The harness contract: ``name,us_per_call,derived`` CSV rows."""
     RECORDED[name] = float(us_per_call)
@@ -28,7 +47,18 @@ def drain_recorded() -> Dict[str, float]:
 
 
 def write_bench_json(suite: str, rows: Dict[str, float], out_dir: str) -> str:
-    """Write ``BENCH_<suite>.json`` mapping row name → µs/call."""
+    """Write ``BENCH_<suite>.json`` mapping row name → µs/call.
+
+    Every artifact also records its measurement environment as ``_env.*``
+    rows (numeric, like everything else in the schema): a baseline
+    regenerated under a different device count diffs loudly instead of
+    silently mixing environments — the committed federation-tick baseline
+    was once recorded in a 1-device process while claiming a sharded
+    speedup, which this field makes impossible to miss."""
+    import jax
+
+    rows = dict(rows)
+    rows["_env.device_count"] = float(len(jax.devices()))
     path = os.path.join(out_dir, f"BENCH_{suite}.json")
     with open(path, "w") as f:
         json.dump(rows, f, indent=2, sort_keys=True)

@@ -2,8 +2,16 @@
 
 Prints ``name,us_per_call,derived`` CSV. ``--only <prefix>`` filters.
 ``--json [dir]`` additionally writes one machine-readable
-``BENCH_<suite>.json`` file per suite (name → µs/call), so the perf
+``BENCH_<suite>.json`` file per suite (name → µs/call, plus numeric
+``_env.*`` rows recording the measurement environment — device count — so
+baselines regenerated under different settings diff loudly), so the perf
 trajectory can be tracked across PRs by diffing committed artifacts.
+
+``--smoke`` (the ``make bench-smoke`` tier-1 gate) runs EVERY suite at tiny
+extents (N=2 owners, E ≤ 1k, single-digit epochs) — the bench code paths,
+including their in-bench parity asserts, execute in CI time. Smoke numbers
+are not measurements: combining ``--smoke`` with ``--json`` is refused so
+they can never overwrite the committed baselines.
 """
 from __future__ import annotations
 
@@ -59,8 +67,24 @@ def main() -> None:
         default=None, metavar="DIR",
         help="write BENCH_<suite>.json per suite (default: the repo root)",
     )
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny-extent tier-1 gate: run every suite at N=2 / E≤1k",
+    )
     args = ap.parse_args()
+    if args.smoke:
+        if args.json is not None:
+            ap.error("--smoke numbers must never overwrite BENCH_*.json "
+                     "baselines; drop --json")
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
 
+    import jax
+
+    print(
+        f"# devices={len(jax.devices())} backend={jax.default_backend()}"
+        f"{' SMOKE (numbers are not measurements)' if args.smoke else ''}",
+        file=sys.stderr,
+    )
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in SUITES:

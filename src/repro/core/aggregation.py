@@ -136,9 +136,11 @@ def virtual_extension(
     if vs is None:
         return None
     neigh, rels, extra = vs
-    # translated (DP) embeddings of the neighbors and joining relations
-    v_ent = np.asarray(generate_fn(client_trainer.get_entity_embeddings(neigh)))
-    v_rel = np.asarray(generate_fn(client_trainer.get_relation_embeddings(rels)))
+    # translated (DP) embeddings of the neighbors and joining relations —
+    # kept on device (the generator already ran host-side): staging them
+    # through host numpy was a device→host→device round trip per handshake
+    v_ent = jnp.asarray(generate_fn(client_trainer.get_entity_embeddings(neigh)))
+    v_rel = jnp.asarray(generate_fn(client_trainer.get_relation_embeddings(rels)))
 
-    host_trainer.extend_tables(jnp.asarray(v_ent), jnp.asarray(v_rel), extra)
+    host_trainer.extend_tables(v_ent, v_rel, extra)
     return VirtualExtension(len(neigh), len(rels), extra)

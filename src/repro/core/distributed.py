@@ -21,7 +21,7 @@ Also provides a sharded KGE train step: the entity table is sharded over the
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -81,6 +81,119 @@ def owner_shard_map(fn, n_owners: int):
 def owner_sharding(n_owners: int) -> NamedSharding:
     """Input sharding for ``owner_shard_map`` operands (leading owner axis)."""
     return NamedSharding(make_owner_mesh(n_owners), P("owners"))
+
+
+# ---------------------------------------------------- owner-sticky placement
+class OwnerPlacement:
+    """Sticky owner → device registry: each owner is assigned a home device
+    (round-robin, in first-seen order) the first time it is looked up, and
+    the assignment NEVER changes afterwards — plan recomposition (drained
+    queues, mixed handshake/self-train ticks, owners joining late) cannot
+    re-place an owner. This is what lets the federation tick engine keep an
+    owner's state (embedding tables, padded triple stores, CSR filters, pair
+    caches) resident on one chip across ticks instead of re-staging it from
+    the default device every dispatch."""
+
+    def __init__(self, devices: Optional[Sequence] = None):
+        self.devices: Tuple = tuple(
+            devices if devices is not None else jax.devices()
+        )
+        self._slot: Dict[str, int] = {}
+
+    def slot(self, owner: str) -> int:
+        """The owner's sticky device index (== its preferred position in an
+        owner-mesh chunk)."""
+        s = self._slot.get(owner)
+        if s is None:
+            s = len(self._slot) % len(self.devices)
+            self._slot[owner] = s
+        return s
+
+    def device(self, owner: str):
+        return self.devices[self.slot(owner)]
+
+    def assignments(self) -> Dict[str, int]:
+        return dict(self._slot)
+
+
+def committed_device(tree) -> Optional[jax.Device]:
+    """The single device a pytree is committed to, or ``None`` when its
+    leaves are uncommitted (free to follow any computation). Used by
+    non-sharded consumers (the serial federation path, trainer handoff) to
+    co-locate their own operands with owner-resident state."""
+    for leaf in jax.tree.leaves(tree):
+        if getattr(leaf, "committed", False):
+            devs = leaf.devices()
+            if len(devs) == 1:
+                return next(iter(devs))
+    return None
+
+
+def chunk_extents(n: int, n_devices: int) -> List[Tuple[int, int]]:
+    """Decompose a signature bucket of ``n`` entries into ``(real, extent)``
+    chunks: greedy full-mesh chunks of ``n_devices`` entries, then ONE
+    remainder chunk whose extent is the next power of two (capped at the
+    device count) — the ``extent - real`` tail positions are filled with
+    masked dummy entries (replicas of a real entry whose outputs are
+    discarded).
+
+    Restricting extents to ``{n_devices} ∪ {2^k < n_devices}`` caps group
+    programs per signature at ~log₂(devices): a bucket shrinking by one
+    owner (an owner draining its queue mid-federation) re-pads into an
+    already-compiled extent instead of compiling one program per exact
+    bucket size.
+    """
+    if n_devices < 1:
+        raise ValueError("chunk_extents needs at least one device")
+    out: List[Tuple[int, int]] = []
+    pos = 0
+    while n - pos >= n_devices:
+        out.append((n_devices, n_devices))
+        pos += n_devices
+    r = n - pos
+    if r:
+        extent = min(1 << (r - 1).bit_length(), n_devices)
+        out.append((r, extent))
+    return out
+
+
+def assemble_group(entries: List[Dict], extent: int) -> Dict:
+    """Zero-copy stacking of per-owner inputs into shard_map group operands.
+
+    ``entries`` are ``extent`` structurally-identical pytrees whose leaves
+    are committed single-device arrays, entry ``k`` on mesh device ``k``.
+    Each leaf is stacked along a leading owner axis via
+    ``jax.make_array_from_single_device_arrays`` — a metadata-only view of
+    the resident per-device shards, NOT a gather-to-one-device + re-shard
+    (the ``jnp.stack`` + ``device_put`` this replaces paid 2·extent array
+    movements per leaf per tick). The only per-leaf device work is the
+    ``expand_dims`` reshape producing the (1, ...) shard view."""
+    sharding = owner_sharding(extent)
+    flats = [jax.tree.flatten(e) for e in entries]
+    treedef = flats[0][1]
+    stacked = []
+    for leaves in zip(*(f[0] for f in flats)):
+        shards = [jnp.expand_dims(x, 0) for x in leaves]
+        stacked.append(
+            jax.make_array_from_single_device_arrays(
+                (extent,) + tuple(leaves[0].shape), sharding, shards
+            )
+        )
+    return jax.tree.unflatten(treedef, stacked)
+
+
+def disassemble_group(out, extent: int) -> List:
+    """Split a shard_map group output back into per-owner pytrees WITHOUT
+    moving data: position ``k``'s result is mesh device ``k``'s shard,
+    squeezed back to the unstacked shape and still committed to that device
+    — group outputs stay owner-resident across ticks."""
+    leaves, treedef = jax.tree.flatten(out)
+    per_pos = [[] for _ in range(extent)]
+    for leaf in leaves:
+        shards = sorted(leaf.addressable_shards, key=lambda s: s.index[0].start)
+        for k in range(extent):
+            per_pos[k].append(jnp.squeeze(shards[k].data, axis=0))
+    return [jax.tree.unflatten(treedef, p) for p in per_pos]
 
 
 def init_distributed_ppat(key, dim: int, cfg: PPATConfig):

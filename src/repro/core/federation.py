@@ -90,17 +90,25 @@ class TickEntry:
 
 class _ClientView:
     """Read-only embedding access over a plan-time params snapshot, with the
-    trainer surface ``virtual_extension`` expects."""
+    trainer surface ``virtual_extension`` expects. ``device`` optionally
+    commits every gathered row batch to the host's device — with owner-
+    sticky residency the snapshot lives on the CLIENT's device, and handing
+    host-side math a differently-committed operand is an error; the explicit
+    put is the client → host communication of the paper's protocol."""
 
-    def __init__(self, params: Dict[str, jnp.ndarray], model):
+    def __init__(self, params: Dict[str, jnp.ndarray], model, device=None):
         self.params = params
         self.model = model
+        self.device = device
+
+    def _ship(self, rows: jnp.ndarray) -> jnp.ndarray:
+        return rows if self.device is None else jax.device_put(rows, self.device)
 
     def get_entity_embeddings(self, idx) -> jnp.ndarray:
-        return self.params["ent"][jnp.asarray(idx)]
+        return self._ship(self.params["ent"][jnp.asarray(idx)])
 
     def get_relation_embeddings(self, idx) -> jnp.ndarray:
-        return self.params["rel"][jnp.asarray(idx)]
+        return self._ship(self.params["rel"][jnp.asarray(idx)])
 
 
 class FederationScheduler:
@@ -126,6 +134,7 @@ class FederationScheduler:
         batch_size: int = 100,
         tick_impl: Optional[str] = None,
         tick_placement: Optional[str] = None,
+        tick_residency: Optional[str] = None,
     ):
         # score_split="test" reproduces Alg. 1 verbatim (the paper backtracks
         # on g_j.test); "valid" (default) is the leakage-free variant.
@@ -140,6 +149,12 @@ class FederationScheduler:
         # engine places tick-entry programs; resolved per execute so a
         # REPRO_TICK_PLACEMENT change between runs takes effect
         self.tick_placement = tick_placement
+        # "auto" | "resident" | "normalize" (None → env/auto): whether tick
+        # results stay committed to each owner's sticky home device
+        # ("resident", the default — steady-state ticks move no cached
+        # inputs and only scalars sync to host) or are staged back to the
+        # default device each tick ("normalize", the legacy behavior)
+        self.tick_residency = tick_residency
         self.kgs = kgs
         self.registry = registry or AlignmentRegistry.from_kgs(kgs)
         families = families or {n: "transe" for n in kgs}
@@ -269,15 +284,24 @@ class FederationScheduler:
 
     def _valid_hit10(self, name: str) -> float:
         """Backtrack score = filtered Hit@10 on the score split, ranked by the
-        streaming fused-rank engine."""
+        streaming fused-rank engine. Prefers the tick engine's device-resident
+        scoring cache (zero per-call uploads; the computation runs on the
+        owner's home device when its params are resident there), falling back
+        to the host-side arrays for custom-score configurations."""
         from repro.kge.eval import link_prediction
 
         tr = self.trainers[name]
         split = "test" if self.score_split == "test" else "valid"
+        info = self._tick_engine._score_info(name)
+        if info["metric"] == "hit10":
+            a = info["arrays"]
+            pre = (a["test"], a["filt_t"], a["filt_h"])
+        else:
+            pre = self._hit10_inputs(name)
         lp = link_prediction(
             tr.params, tr.model, self.kgs[name],
             split=split, max_test=self.score_max_test,
-            precomputed=self._hit10_inputs(name),
+            precomputed=pre,
         )
         return lp["hit@10"]
 
@@ -333,9 +357,16 @@ class FederationScheduler:
         ent = self.registry.entities(client, host)
         rel = self.registry.relations(client, host)
         hos_tr = self.trainers[host]
+        # after owner-sticky batched ticks the two parties' params may be
+        # committed to different devices; all handshake math runs host-side,
+        # so client rows are shipped to the host's device (a no-op while
+        # both live on the default device)
+        from repro.core.distributed import committed_device
+
         cli = _ClientView(
             client_view or dict(self.trainers[client].params),
             self.trainers[client].model,
+            device=committed_device(hos_tr.params),
         )
 
         idx_c, idx_h = ent
@@ -462,12 +493,15 @@ class FederationScheduler:
         self_train: bool = True,
         tick_impl: Optional[str] = None,
         tick_placement: Optional[str] = None,
+        tick_residency: Optional[str] = None,
     ) -> Dict[str, float]:
         """Scheduler ticks until quiescence (all queues empty, no improvement)
         or ``max_ticks``. Each tick serves every Ready owner once, per the
-        tick-start plan. ``tick_impl`` ("batched" | "reference") and
-        ``tick_placement`` ("auto" | "single" | "sharded") override the
-        constructor/env-resolved engine and device placement for this run."""
+        tick-start plan. ``tick_impl`` ("batched" | "reference"),
+        ``tick_placement`` ("auto" | "single" | "sharded") and
+        ``tick_residency`` ("auto" | "resident" | "normalize") override the
+        constructor/env-resolved engine, device placement, and output
+        residency for this run."""
         impl = resolve_tick_impl(
             tick_impl if tick_impl is not None else self.tick_impl
         )
@@ -489,7 +523,8 @@ class FederationScheduler:
             plan = self.plan_tick(self_train=self_train)
             if impl == "batched" and plan:
                 events = self._tick_engine.execute(
-                    plan, self._tick, placement=tick_placement
+                    plan, self._tick, placement=tick_placement,
+                    residency=tick_residency,
                 )
             else:
                 events = [

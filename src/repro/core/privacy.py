@@ -27,26 +27,39 @@ class MomentsAccountant:
         self.queries = 0
 
     def update(self, n0, n1) -> None:
-        """Account one PATE query (or a batch: n0/n1 arrays)."""
-        n0 = np.atleast_1d(np.asarray(n0, dtype=np.float64))
-        n1 = np.atleast_1d(np.asarray(n1, dtype=np.float64))
+        """Account one PATE query (or a batch: n0/n1 arrays).
+
+        Vectorized over the query batch: one (Q, L) broadcast instead of a
+        Python loop — a federation tick accounts steps × batch ≈ 2k queries
+        per handshake, and the per-query loop was a measurable host-side
+        serial cost in an otherwise device-resident tick. Per-query math is
+        Eqs. 9–10 exactly as before; the moment accumulators gain only the
+        usual pairwise-vs-sequential float summation reordering (both tick
+        engines share this accountant, so their ε parity is unaffected)."""
+        n0 = np.atleast_1d(np.asarray(n0, dtype=np.float64)).ravel()
+        n1 = np.atleast_1d(np.asarray(n1, dtype=np.float64)).ravel()
+        if n0.size == 0:
+            return
         lam, ls = self.lam, self.ls
-        for a, b in zip(n0, n1):
-            gap = abs(a - b)
-            q = (2.0 + lam * gap) / (4.0 * np.exp(lam * gap))  # Eq. 10
-            data_indep = 2.0 * lam**2 * ls * (ls + 1.0)
-            denom = 1.0 - np.exp(2.0 * lam) * q
-            if q < 1.0 / (1.0 + np.exp(2.0 * lam)) and denom > 0:
-                with np.errstate(over="ignore"):
-                    term = (1.0 - q) * ((1.0 - q) / denom) ** ls + q * np.exp(
-                        2.0 * lam * ls
-                    )
-                data_dep = np.log(np.maximum(term, 1e-300))
-                bound = np.minimum(data_indep, np.maximum(data_dep, 0.0))
-            else:
-                bound = data_indep
-            self.alpha += bound
-            self.queries += 1
+        gap = np.abs(n0 - n1)                                   # (Q,)
+        q = (2.0 + lam * gap) / (4.0 * np.exp(lam * gap))       # Eq. 10
+        data_indep = 2.0 * lam**2 * ls * (ls + 1.0)             # (L,)
+        denom = 1.0 - np.exp(2.0 * lam) * q                     # (Q,)
+        ok = (q < 1.0 / (1.0 + np.exp(2.0 * lam))) & (denom > 0)
+        with np.errstate(over="ignore", divide="ignore", invalid="ignore"):
+            ratio = (1.0 - q) / np.where(ok, denom, 1.0)        # (Q,)
+            term = (
+                (1.0 - q)[:, None] * ratio[:, None] ** ls[None, :]
+                + q[:, None] * np.exp(2.0 * lam * ls)[None, :]
+            )                                                   # (Q, L)
+            data_dep = np.log(np.maximum(term, 1e-300))
+        bound = np.where(
+            ok[:, None],
+            np.minimum(data_indep[None, :], np.maximum(data_dep, 0.0)),
+            data_indep[None, :],
+        )
+        self.alpha += bound.sum(axis=0)
+        self.queries += int(gap.size)
 
     def epsilon(self) -> float:
         """ε̂ = min_l (α(l) + log(1/δ)) / l — Eq. 8."""

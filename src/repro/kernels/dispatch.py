@@ -136,6 +136,29 @@ def resolve_tick_placement(placement: Optional[str] = None) -> str:
     return placement
 
 
+def resolve_tick_residency(residency: Optional[str] = None) -> str:
+    """Pick what happens to tick-entry outputs after a batched tick:
+    ``resident`` (the default) leaves every owner's results committed to the
+    device that produced them — an owner's embedding tables stay on its
+    sticky home device across ticks, and only the scalar decisions/scores
+    sync to host; ``normalize`` restores the pre-residency behavior of
+    ``jax.device_put``-ing all results back to the default device each tick
+    (an escape hatch for consumers that cannot handle committed arrays).
+    ``REPRO_TICK_RESIDENCY`` overrides.
+    """
+    if residency is None:
+        residency = (
+            os.environ.get("REPRO_TICK_RESIDENCY", "").strip().lower() or None
+        )
+    if residency is None or residency == "auto":
+        residency = "resident"
+    if residency not in ("resident", "normalize"):
+        raise ValueError(
+            f"unknown tick residency {residency!r} (auto|resident|normalize)"
+        )
+    return residency
+
+
 def resolve_rank_impl(impl: Optional[str] = None) -> str:
     """Pick the fused-rank engine implementation: ``pallas`` or ``xla``.
 

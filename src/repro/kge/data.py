@@ -211,7 +211,11 @@ def equal_shape_universe(
     padded store shapes. This builder pins shapes exactly: it is the
     deployment the paper scales to (N symmetric KG processes) and the shape
     the tick engine's trace-time program dedup targets — all N owners share
-    ONE compiled tick-entry program per tick kind.
+    ONE compiled tick-entry program per tick kind, and with owner-sticky
+    placement each owner's chunk position in the shard_map group equals its
+    home device. Owner counts that don't match the mesh (5 owners on 3 or 8
+    devices — the pow-2 chunk-extent tests) are exactly as cheap: partial
+    chunks pad with dummy entries instead of compiling new extents.
     """
     kgs: Dict[str, KG] = {}
     private = entities - shared

@@ -29,6 +29,13 @@ Step implementations (``kernels.dispatch.resolve_train_impl``):
 ``pallas`` — the fused gather→score→scatter ``sparse_update`` kernel
 (TransE/DistMult); ``xla`` — the autodiff sparse step (all families);
 ``reference`` — the seed dense host-loop path in ``trainer._epoch``.
+
+Device residency: every entry point accepts committed (owner-resident)
+tables — after owner-sticky federation ticks a trainer's params live on its
+home device, the jitted scan follows them there, and ``pad_tables`` /
+``strip_tables`` / ``pad_triples`` preserve the commitment (the trainer
+additionally co-locates its padded-triple cache, see
+``KGETrainer._padded_triples``).
 """
 from __future__ import annotations
 

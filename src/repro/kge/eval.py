@@ -229,13 +229,19 @@ def streaming_side_counts(
     gold-score / fallback selection, and no eager query-building dispatches.
     The implementation is resolved here (host-side) so the env overrides
     keep taking effect per call.
+
+    ``chunk``/``filt`` may be host numpy (uploaded once per call — one
+    transfer for the whole chunk, not one per column) or device arrays
+    (e.g. the federation scheduler's owner-resident scoring caches — zero
+    per-call uploads); with params committed to an owner's home device the
+    whole rank computation runs there.
     """
     from repro.kernels.dispatch import resolve_rank_impl
 
+    tri = jnp.asarray(chunk)
     counts = _side_counts_jit(
         params, model,
-        jnp.asarray(chunk[:, 0]), jnp.asarray(chunk[:, 1]),
-        jnp.asarray(chunk[:, 2]), jnp.asarray(filt),
+        tri[:, 0], tri[:, 1], tri[:, 2], jnp.asarray(filt),
         side=side, block_e=block_e, impl=resolve_rank_impl(impl),
     )
     return np.asarray(counts)

@@ -160,12 +160,21 @@ class KGETrainer:
         return float(losses[-1])
 
     def _padded_triples(self, tr: np.ndarray) -> jnp.ndarray:
+        from repro.core.distributed import committed_device
         from repro.kge.engine import pad_triples
 
         b = min(self.batch_size, len(tr))
-        key = (len(tr), b)
+        # co-locate with the params: after owner-sticky federation ticks the
+        # tables live committed on this owner's home device, and the padded
+        # store should be uploaded there ONCE, not implicitly re-staged on
+        # every train_epochs dispatch
+        dev = committed_device(self.params)
+        key = (len(tr), b, dev)
         if self._tri_cache is None or self._tri_cache[0] != key:
-            self._tri_cache = (key, pad_triples(jnp.asarray(tr, jnp.int32), b))
+            padded = pad_triples(jnp.asarray(tr, jnp.int32), b)
+            if dev is not None:
+                padded = jax.device_put(padded, dev)
+            self._tri_cache = (key, padded)
         return self._tri_cache[1]
 
     def _train_epochs_reference(self, tr: np.ndarray, epochs: int) -> float:

@@ -10,7 +10,11 @@ import pytest
 from repro.core.federation import FederationScheduler, NodeState, TickEntry
 from repro.core.ppat import PPATConfig
 from repro.core.tick_engine import tick_program_cache_size
-from repro.kernels.dispatch import resolve_tick_impl, resolve_tick_placement
+from repro.kernels.dispatch import (
+    resolve_tick_impl,
+    resolve_tick_placement,
+    resolve_tick_residency,
+)
 from repro.kge.data import equal_shape_universe, synthesize_universe
 from repro.kge.engine import (
     _train_scan,
@@ -275,6 +279,42 @@ def test_resolve_tick_placement(monkeypatch):
     monkeypatch.delenv("REPRO_TICK_PLACEMENT")
     with pytest.raises(ValueError):
         resolve_tick_placement("nope")
+
+
+def test_resolve_tick_residency(monkeypatch):
+    """Residency resolution: explicit wins, then REPRO_TICK_RESIDENCY, then
+    auto → resident (owner-sticky is the default everywhere; normalize is
+    the legacy stage-back-to-device-0 escape hatch)."""
+    assert resolve_tick_residency(None) == "resident"
+    assert resolve_tick_residency("auto") == "resident"
+    assert resolve_tick_residency("resident") == "resident"
+    assert resolve_tick_residency("normalize") == "normalize"
+    monkeypatch.setenv("REPRO_TICK_RESIDENCY", "normalize")
+    assert resolve_tick_residency(None) == "normalize"
+    assert resolve_tick_residency("resident") == "resident"  # explicit wins
+    monkeypatch.delenv("REPRO_TICK_RESIDENCY")
+    with pytest.raises(ValueError):
+        resolve_tick_residency("nope")
+
+
+def test_single_device_residency_keeps_state_usable(universe):
+    """On one device residency is trivially satisfied; the engine's resident
+    caches must still serve steady-state ticks without re-staging cached
+    immutable inputs (the miss counter stays flat once every pair/score
+    cache is warm)."""
+    fed = _make(universe)
+    fed.initial_training()
+    fed.run(max_ticks=2, tick_impl="batched")  # warm every (client, host)
+    for name in universe:  # warm the self-train caches too
+        fed.queue[name].clear()
+        fed._queued[name].clear()
+    fed.run(max_ticks=1, tick_impl="batched")
+    eng = fed._tick_engine
+    misses = eng.resident_transfers
+    fed.run(max_ticks=2, tick_impl="batched")
+    assert eng.resident_transfers == misses, (
+        "steady-state single-device ticks re-staged cached inputs"
+    )
 
 
 def test_resolve_tick_impl(monkeypatch):

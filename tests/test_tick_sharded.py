@@ -2,14 +2,19 @@
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the flag never
 leaks into the main test process (smoke tests must see 1 device).
 
-Pins the two tentpole contracts of the sharded tick engine:
+Pins the tentpole contracts of the sharded tick engine:
   * bit-parity — sharded execution (shard_map signature buckets +
-    hash-placed singletons) reproduces ``tick_impl="reference"`` exactly at
+    home-placed singletons) reproduces ``tick_impl="reference"`` exactly at
     ≥4 simulated host devices: decisions, scores, ε history, final
     embeddings;
   * trace-time program dedup — 8 equal-shaped owners compile exactly ONE
     tick-entry program per tick kind (``tick_program_cache_size``), not one
-    per owner.
+    per owner;
+  * owner-sticky device residency — owners keep their home device across
+    plan recompositions, steady-state ticks move ZERO cached immutable
+    inputs (transfer-guard pinned), group chunks pad to full-mesh/pow-2
+    extents with masked dummy entries, and non-sharded consumers accept the
+    committed results.
 """
 import os
 import subprocess
@@ -97,9 +102,10 @@ def test_sharded_parity_equal_owners_hit10_virtual():
 
 def test_sharded_parity_distinct_owners_singletons():
     """Singleton path: owners with distinct shapes never share a signature,
-    so every entry is device_put onto its signature-hash device (distinct
-    signatures may collide on a device — placement trades load balance for
-    compile stability) — still bit-identical to the reference loop."""
+    so every entry runs alone on its owner's sticky home device (distinct
+    owners may share a home when owners outnumber devices — placement trades
+    load balance for residency) — still bit-identical to the reference
+    loop."""
     out = _run(
         """
         import jax
@@ -173,13 +179,256 @@ def test_sharded_program_dedup_eight_equal_owners():
             fed._queued[n].clear()
         fed.run(max_ticks=1, tick_impl="batched")  # 8 equal self-train entries
         assert tick_program_cache_size() == 2, tick_program_cache_size()
-        # regression: sharded ticks must not leave trainer state committed
-        # across devices — switching placement or dropping to the serial
-        # reference loop afterwards has to keep working
+        # owner-sticky residency leaves trainer state committed per owner —
+        # switching placement or dropping to the serial reference loop
+        # afterwards has to accept those committed arrays and keep working
         fed.run(max_ticks=1, tick_impl="batched", tick_placement="single")
         fed.run(max_ticks=1, tick_impl="reference")
         fed.run(max_ticks=1, tick_impl="batched", tick_placement="sharded")
+        # the normalize escape hatch restores the stage-back-to-device-0
+        # behavior for consumers that cannot handle committed arrays
+        fed.run(max_ticks=1, tick_impl="batched", tick_placement="sharded",
+                tick_residency="normalize")
+        for e in fed.events:
+            if e.tick == fed._tick and e.accepted:
+                ent = fed.trainers[e.host].params["ent"]
+                assert ent.devices() == {jax.devices()[0]}, e.host
         print("SHARDED_DEDUP_OK")
         """
     )
     assert "SHARDED_DEDUP_OK" in out
+
+
+def test_owner_sticky_residency_zero_steady_state_transfers():
+    """The tentpole pins, on a 4-owner / 4-device symmetric federation:
+
+      * sticky placement — every owner's home slot survives plan
+        recomposition (handshake ticks, drained-queue self-train ticks);
+      * zero steady-state transfers — once the pair rotation has warmed the
+        per-device caches, further sharded ticks run under
+        ``jax.transfer_guard(\"disallow\")`` (host→device AND device→device):
+        no cached immutable input is re-staged, no implicit transfer happens
+        at all, and the resident-cache miss counter stays flat; only the
+        per-tick mutable leaves (keys, client views, params) move, via
+        explicit device_put;
+      * residency — owners whose last decision was an accept keep their
+        params committed to their home device."""
+    out = _run(
+        """
+        import jax
+        from repro.core.federation import FederationScheduler
+        from repro.core.ppat import PPATConfig
+        from repro.core.tick_engine import tick_program_cache_size
+        from repro.kge.data import equal_shape_universe
+
+        assert len(jax.devices()) == 4
+        kgs = equal_shape_universe(
+            4, entities=120, relations=6, triples=900, shared=32, seed=5
+        )
+        fed = FederationScheduler(
+            kgs, dim=16, ppat_cfg=PPATConfig(steps=4, seed=0),
+            local_epochs=2, update_epochs=2, seed=0, use_virtual=False,
+            score_max_test=24,
+        )
+        fed.initial_training()
+        eng = fed._tick_engine
+        # warm: 3 ticks rotate through every (client, host) pair; a drained
+        # tick compiles + caches the self-train signature too
+        fed.run(max_ticks=3, tick_impl="batched", tick_placement="sharded")
+        homes = dict(eng.placement.assignments())
+        assert sorted(homes.values()) == [0, 1, 2, 3]
+        saved = {n: list(fed.queue[n]) for n in kgs}
+        for n in kgs:
+            fed.queue[n].clear(); fed._queued[n].clear()
+        fed.run(max_ticks=1, tick_impl="batched", tick_placement="sharded")
+        for n, q in saved.items():
+            for c in q:
+                if c not in fed._queued[n]:
+                    fed.queue[n].append(c); fed._queued[n].add(c)
+
+        progs = tick_program_cache_size()
+        misses = eng.resident_transfers
+        # steady state: strictest possible pin — NO implicit transfer in
+        # either direction may happen during the guarded ticks
+        with jax.transfer_guard_host_to_device("disallow"), \\
+             jax.transfer_guard_device_to_device("disallow"):
+            fed.run(max_ticks=2, tick_impl="batched", tick_placement="sharded")
+        assert eng.resident_transfers == misses, (
+            "steady-state tick re-staged cached immutable inputs"
+        )
+        assert tick_program_cache_size() == progs, "steady-state retrace"
+        # plan recomposition did not move anyone's home
+        assert dict(eng.placement.assignments()) == homes
+        # accepted owners' tables live on their home device
+        last = {}
+        for e in fed.events:
+            if e.kind != "init":
+                last[e.host] = e
+        for n, e in last.items():
+            if e.accepted:
+                ent = fed.trainers[n].params["ent"]
+                assert ent.committed and ent.devices() == {
+                    jax.devices()[homes[n]]
+                }, (n, homes[n], ent.devices())
+        print("STICKY_RESIDENCY_OK")
+        """,
+        devices=4,
+    )
+    assert "STICKY_RESIDENCY_OK" in out
+
+
+def test_non_pow2_mesh_partial_chunks_parity_and_compile_bound():
+    """5 equal-shaped owners on a 3-device mesh: a signature bucket of 5
+    decomposes into a full-mesh chunk (extent 3) plus a power-of-two
+    remainder chunk (extent 2) — parity still bitwise, and group compiles
+    per signature stay ≤ floor(log2(devices)) + 1 = 2 (the pow-2 extent
+    lever: a bucket shrinking by one owner re-pads into a compiled extent
+    instead of compiling one program per exact size)."""
+    out = _run(
+        """
+        import jax
+        from repro.core.federation import FederationScheduler
+        from repro.core.ppat import PPATConfig
+        from repro.core.tick_engine import tick_program_cache_size
+        from repro.kge.data import equal_shape_universe
+
+        assert len(jax.devices()) == 3
+        kgs = equal_shape_universe(
+            5, entities=120, relations=6, triples=900, shared=32, seed=7
+        )
+
+        def make():
+            return FederationScheduler(
+                kgs, dim=16, ppat_cfg=PPATConfig(steps=4, seed=0),
+                local_epochs=2, update_epochs=2, seed=0, use_virtual=False,
+                score_max_test=24,
+            )
+
+        feds = {}
+        for impl, kw in (
+            ("reference", {}),
+            ("batched", dict(tick_placement="sharded")),
+        ):
+            f = make()
+            f.initial_training()
+            f.run(max_ticks=2, tick_impl=impl, **kw)
+            feds[impl] = f
+        assert_parity(feds["reference"], feds["batched"], kgs)
+        # one ppat signature, two chunk extents {3, 2} -> exactly 2 programs
+        assert tick_program_cache_size() == 2, tick_program_cache_size()
+        print("NON_POW2_CHUNKS_OK")
+        """,
+        devices=3,
+    )
+    assert "NON_POW2_CHUNKS_OK" in out
+
+
+def test_dummy_padded_chunk_parity_single_program():
+    """5 equal-shaped owners on an 8-device mesh: the bucket rounds up to ONE
+    full-mesh chunk with 3 masked dummy entries (replicas of a real entry
+    whose outputs are discarded) — one group program per tick kind, and the
+    dummies leave no trace in the protocol trajectory (bit-parity)."""
+    out = _run(
+        """
+        import jax
+        from repro.core.federation import FederationScheduler
+        from repro.core.ppat import PPATConfig
+        from repro.core.tick_engine import tick_program_cache_size
+        from repro.kge.data import equal_shape_universe
+
+        assert len(jax.devices()) == 8
+        kgs = equal_shape_universe(
+            5, entities=120, relations=6, triples=900, shared=32, seed=9
+        )
+
+        def make():
+            return FederationScheduler(
+                kgs, dim=16, ppat_cfg=PPATConfig(steps=4, seed=0),
+                local_epochs=2, update_epochs=2, seed=0, use_virtual=False,
+                score_max_test=24,
+            )
+
+        ref = make(); ref.initial_training()
+        ref.run(max_ticks=2, tick_impl="reference")
+        bat = make(); bat.initial_training()
+        bat.run(max_ticks=1, tick_impl="batched", tick_placement="sharded")
+        # 5 ppat entries pad to one extent-8 shard_map chunk: ONE program
+        assert tick_program_cache_size() == 1, tick_program_cache_size()
+        bat.run(max_ticks=1, tick_impl="batched", tick_placement="sharded")
+        assert tick_program_cache_size() == 1, tick_program_cache_size()
+        assert_parity(ref, bat, kgs)
+        print("DUMMY_PAD_OK")
+        """
+    )
+    assert "DUMMY_PAD_OK" in out
+
+
+def test_non_sharded_consumers_accept_committed_results():
+    """After owner-sticky sharded ticks an owner's tables are committed to
+    its home device; every non-sharded consumer must take them as-is:
+    the serial reference tick (cross-owner handshake math), direct trainer
+    handoff (train_epochs), eval (link_prediction), checkpoint round-trip,
+    and the serving ranker."""
+    out = _run(
+        """
+        import os, tempfile
+        import jax
+        import numpy as np
+        from repro.core.federation import FederationScheduler
+        from repro.core.ppat import PPATConfig
+        from repro.kge.data import equal_shape_universe
+
+        assert len(jax.devices()) == 2
+        kgs = equal_shape_universe(
+            2, entities=120, relations=6, triples=900, shared=32, seed=11
+        )
+        fed = FederationScheduler(
+            kgs, dim=16, ppat_cfg=PPATConfig(steps=4, seed=0),
+            local_epochs=2, update_epochs=2, seed=0, score_max_test=24,
+        )
+        fed.initial_training()
+        fed.run(max_ticks=2, tick_impl="batched", tick_placement="sharded")
+        name = [n for n in kgs][1]
+        tr = fed.trainers[name]
+
+        # serial reference path on committed state (client and host owners
+        # may live on different devices)
+        fed.run(max_ticks=1, tick_impl="reference")
+
+        # trainer handoff: direct local training on resident tables
+        tr.train_epochs(1)
+
+        # eval: the streaming rank engine runs on the owner's device
+        from repro.kge.eval import link_prediction
+        lp = link_prediction(tr.params, tr.model, kgs[name], max_test=16)
+        assert 0.0 <= lp["hit@10"] <= 1.0
+
+        # checkpoint round-trip
+        from repro.checkpoint import load_checkpoint, save_checkpoint
+        path = os.path.join(tempfile.mkdtemp(), "owner.npz")
+        save_checkpoint(path, tr.params, metadata={"owner": name})
+        like = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), dict(tr.params)
+        )
+        restored, meta = load_checkpoint(path, like)
+        assert meta["owner"] == name
+        for k in tr.params:
+            np.testing.assert_array_equal(
+                np.asarray(restored[k]), np.asarray(tr.params[k])
+            )
+
+        # serving: candidate ranker over the committed tables
+        from repro.serving import KGECandidateRanker
+        ranker = KGECandidateRanker(
+            tr.params, tr.model, known_triples=kgs[name].train, block_e=64
+        )
+        test = np.asarray(kgs[name].test)[:4]
+        ranks = ranker.rank_tails(test[:, 0], test[:, 1], test[:, 2])
+        assert len(ranks) == len(test) and (ranks >= 1).all()
+        ids, scores = ranker.topk_tails(test[:, 0], test[:, 1], k=5)
+        assert ids.shape == (len(test), 5)
+        print("COMMITTED_CONSUMERS_OK")
+        """,
+        devices=2,
+    )
+    assert "COMMITTED_CONSUMERS_OK" in out
