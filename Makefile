@@ -1,7 +1,7 @@
 PY := PYTHONPATH=src python
 
 .PHONY: tier1 test check-hygiene bench-eval bench-train bench-tick bench \
-	bench-json bench-smoke
+	bench-json bench-smoke chaos-smoke
 
 # CI gate: repo hygiene, the full suite, the engine parity tests explicitly
 # (they are the acceptance bars for the streaming fused-rank eval engine, the
@@ -13,6 +13,7 @@ tier1: check-hygiene
 	$(PY) -m pytest -q tests/test_train_engine.py -k "parity or retrace"
 	$(PY) -m pytest -q tests/test_tick_engine.py -k "parity or reused"
 	$(MAKE) bench-smoke
+	$(MAKE) chaos-smoke
 
 # every registered bench suite at tiny extents (N=2 owners, E ≤ 1k,
 # single-digit epochs): exercises the bench code paths — including the
@@ -21,6 +22,14 @@ tier1: check-hygiene
 # write BENCH_*.json from a smoke run.
 bench-smoke:
 	XLA_FLAGS="--xla_force_host_platform_device_count=2" PYTHONPATH=src:. python benchmarks/run.py --smoke
+
+# seeded fault soak over a 4-owner ring (crashes + stragglers + corrupted
+# embeddings for the first ticks, then a clean tail): asserts no tick
+# aborts, quarantines release, zero BUSY/QUARANTINED leak at quiescence,
+# and the federation still converges. 4 forced host devices so the sharded
+# tick path (group-failure fallback included) runs under fault injection.
+chaos-smoke:
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" PYTHONPATH=src:. python benchmarks/chaos_smoke.py
 
 # fail if generated artifacts (bytecode, pytest caches) are ever tracked
 # again — PR 3 accidentally shipped 12 __pycache__/*.pyc files

@@ -28,6 +28,18 @@ CPU CI. In a single-device process the sharded run degenerates to one
 device — the ``make bench-tick`` / ``make bench-json`` targets force 8
 host devices via ``XLA_FLAGS`` so the committed sharded rows measure real
 multi-device placement. ``--csv <path>`` appends the rows to a file.
+
+A fourth run times the batched engine with the fault-injection layer ARMED
+but inert (``tick_faults="on"``: zero fault rates, norm screens active on
+every exchanged embedding) and emits ``tick_engine.fault_armed`` plus the
+``tick_engine.fault_overhead`` ratio vs the faults-off batched row. The
+faults-OFF rows themselves are the proof that the fault hooks cost nothing
+when disabled: they time the exact default path (``tick_faults`` unset ⇒
+no injector, no screens, no per-entry draws) and are directly comparable
+against the committed pre-fault-layer ``BENCH_federation_tick.json``
+baseline keys (``tick_engine.batched.N8.E10000`` etc.). The armed run is
+held to the same bit-parity contract — an inert injector must not perturb
+a single decision, score, ε, or embedding.
 Under ``REPRO_BENCH_SMOKE`` (``make bench-smoke``) the defaults shrink to
 N=2 owners / E=800 so the whole path — parity asserts included — runs as a
 tier-1 gate.
@@ -114,19 +126,25 @@ def main(argv=None) -> None:
     import jax
 
     ndev = len(jax.devices())
-    # (scheduler key, tick_impl, tick_placement)
+    # (scheduler key, tick_impl, tick_placement, tick_faults)
+    # "on" arms the fault layer with zero rates + active norm screens — the
+    # hooks-armed-but-idle cost; None is the default faults-off fast path.
     runs = [
-        ("reference", "reference", None),
-        ("batched", "batched", "single"),
-        ("sharded", "batched", "sharded"),
+        ("reference", "reference", None, None),
+        ("batched", "batched", "single", None),
+        ("sharded", "batched", "sharded", None),
+        ("armed", "batched", "single", "on"),
     ]
     feds = {}
-    for key, _, _ in runs:
+    for key, _, _, _ in runs:
         feds[key] = _make(kgs, args)
         feds[key].initial_training()
 
-    def _one_tick(key, impl, placement):
-        feds[key].run(max_ticks=1, tick_impl=impl, tick_placement=placement)
+    def _one_tick(key, impl, placement, faults):
+        feds[key].run(
+            max_ticks=1, tick_impl=impl, tick_placement=placement,
+            tick_faults=faults,
+        )
 
     # warm-up: compile every program each impl will use; stop early once the
     # tick-program cache has stopped growing for TWO consecutive rounds
@@ -136,29 +154,31 @@ def main(argv=None) -> None:
     # steady state, not a late compile)
     progs, stable = -1, 0
     for w in range(args.warm_ticks):
-        for key, impl, placement in runs:
-            _one_tick(key, impl, placement)
-        for key, _, _ in runs[1:]:
+        for key, impl, placement, faults in runs:
+            _one_tick(key, impl, placement, faults)
+        for key, _, _, _ in runs[1:]:
             _assert_parity(feds["reference"], feds[key])
         stable = stable + 1 if tick_program_cache_size() == progs else 0
         if stable >= 2:
             break
         progs = tick_program_cache_size()
 
-    timed = {key: 0.0 for key, _, _ in runs}
+    timed = {key: 0.0 for key, _, _, _ in runs}
     for _ in range(args.ticks):
-        for key, impl, placement in runs:
+        for key, impl, placement, faults in runs:
             t0 = time.perf_counter()
-            _one_tick(key, impl, placement)
+            _one_tick(key, impl, placement, faults)
             timed[key] += time.perf_counter() - t0
-        for key, _, _ in runs[1:]:
+        for key, _, _, _ in runs[1:]:
             _assert_parity(feds["reference"], feds[key])
 
     us_ref = timed["reference"] * 1e6 / args.ticks
     us_bat = timed["batched"] * 1e6 / args.ticks
     us_sh = timed["sharded"] * 1e6 / args.ticks
+    us_armed = timed["armed"] * 1e6 / args.ticks
     speedup = us_ref / us_bat
     sh_speedup = us_ref / us_sh
+    fault_overhead = us_armed / us_bat
     # EVERY row records the measurement environment — actual visible device
     # count and the placement mode it timed. The committed baseline was once
     # produced in a 1-device process despite the Makefile forcing 8 host
@@ -192,6 +212,17 @@ def main(argv=None) -> None:
         (f"tick_engine.speedup_sharded.N{args.owners}.E{args.entities}",
          sh_speedup,
          f"speedup={sh_speedup:.1f}x parity=bitwise;{env['sharded']}"),
+        # fault layer: the armed-but-idle cost (zero rates, norm screens on
+        # every exchange) vs the faults-off batched row it shadows. The
+        # faults-OFF rows above run the exact default path — no injector,
+        # no draws, no screens — so they stay comparable against the
+        # committed pre-fault-layer BENCH_federation_tick.json baseline;
+        # this ratio row bounds what turning the layer ON would add.
+        (f"tick_engine.fault_armed.N{args.owners}.E{args.entities}", us_armed,
+         f"batched tick, tick_faults=on (zero rates, screens);{env['batched']}"),
+        (f"tick_engine.fault_overhead.N{args.owners}.E{args.entities}",
+         fault_overhead,
+         f"armed/off ratio={fault_overhead:.2f}x parity=bitwise;{env['batched']}"),
     ]
     for name, us, derived in rows:
         emit(name, us, derived)

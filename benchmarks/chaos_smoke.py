@@ -1,0 +1,97 @@
+"""Tier-1 chaos gate: seeded fault soak over a 4-owner federation.
+
+Drives a small all-ring federation through a deterministic fault storm —
+crashes, stragglers past the tick deadline, and corrupted exchanged
+embeddings for the first ticks (``until=3``), then a clean tail — and
+asserts the fault-tolerance contract at quiescence:
+
+  * no tick aborts: every fault is isolated to its entry and surfaced as a
+    ``FederationEvent(fault=...)`` audit record;
+  * the storm actually fired (multiple fault kinds observed), so the gate
+    cannot silently pass by the injector rotting into a no-op;
+  * the federation heals: deferred retries drain, quarantines release, and
+    no owner is left ``BUSY`` or ``QUARANTINED`` at quiescence;
+  * it still converges: the backtrack invariant holds (best scores never
+    regress below the post-local-training baseline) and at least one PPAT
+    exchange was accepted despite the chaos.
+
+Runs in a handful of seconds on CPU CI (``make chaos-smoke``, wired into
+``make tier1``). This is a pass/fail gate, not a measurement — it is
+deliberately NOT registered in ``benchmarks/run.py``'s suite list, so it
+never lands in ``BENCH_*.json`` artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro.core.federation import FederationScheduler, NodeState
+from repro.core.ppat import PPATConfig
+from repro.kge.data import synthesize_universe
+
+FAULT_SPEC = "crash=0.3,straggle=0.2,corrupt=0.2,seed=5,until=3,delay=1e6"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--owners", type=int, default=4)
+    ap.add_argument("--max-ticks", type=int, default=24)
+    ap.add_argument("--tick-impl", default=None,
+                    choices=[None, "batched", "reference"])
+    args = ap.parse_args(argv)
+
+    n = args.owners
+    stats = [(f"O{i}", 6, 40000, 120000) for i in range(n)]
+    aligns = [(f"O{i}", f"O{(i + 1) % n}", 12000) for i in range(n)]
+    uni = synthesize_universe(
+        seed=3, scale=1 / 1000, kg_stats=stats, alignments=aligns
+    )
+    fed = FederationScheduler(
+        uni, dim=16, ppat_cfg=PPATConfig(steps=3, seed=0),
+        local_epochs=2, update_epochs=1, seed=0,
+        tick_faults=FAULT_SPEC, tick_deadline=1e5,
+        retry_budget=2, backoff_ticks=1, quarantine_ticks=2,
+    )
+    inits = fed.initial_training()
+    t0 = time.perf_counter()
+    fed.run(max_ticks=args.max_ticks, tick_impl=args.tick_impl)
+    wall = time.perf_counter() - t0
+
+    faults = [e.fault for e in fed.events if e.fault]
+    kinds = sorted(set(faults))
+    checks = [
+        (len(kinds) >= 2,
+         f"storm too quiet — need >= 2 fault kinds, saw {kinds}"),
+        (all(s in (NodeState.READY, NodeState.SLEEP)
+             for s in fed.state.values()),
+         "leaked transient state at quiescence: "
+         + str({m: s.value for m, s in fed.state.items()})),
+        (not fed._deferred,
+         f"deferred retries stranded: {fed._deferred}"),
+        (not fed._quarantine_until,
+         f"quarantine never released: {fed._quarantine_until}"),
+        (fed._tick < args.max_ticks,
+         f"did not quiesce before the tick cap ({fed._tick})"),
+        (all(fed.best_score[m] >= inits[m] for m in uni),
+         "backtrack invariant violated: best score regressed"),
+        (any(e.accepted and e.kind == "ppat" for e in fed.events),
+         "no PPAT exchange accepted — federation made no progress"),
+    ]
+    failures = [msg for ok, msg in checks if not ok]
+    print(
+        f"chaos-smoke: N={n} ticks={fed._tick} wall={wall:.1f}s "
+        f"faults={len(faults)} kinds={kinds} "
+        f"accepted={sum(1 for e in fed.events if e.accepted)}"
+    )
+    for msg in failures:
+        print(f"chaos-smoke FAIL: {msg}", file=sys.stderr)
+    if failures:
+        return 1
+    print("chaos-smoke: PASS — faults isolated, federation healed and "
+          "converged")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

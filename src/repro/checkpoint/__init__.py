@@ -1,1 +1,6 @@
-from repro.checkpoint.checkpointer import save_checkpoint, load_checkpoint  # noqa: F401
+from repro.checkpoint.checkpointer import (  # noqa: F401
+    load_checkpoint,
+    restore_scheduler,
+    save_checkpoint,
+    save_scheduler,
+)

@@ -3,6 +3,18 @@
 Pytrees are flattened to path-keyed arrays; on restore the tree is rebuilt
 and (optionally) device_put with the caller's shardings. Metadata (step,
 config hash) rides along as a JSON sidecar entry.
+
+``save_scheduler`` / ``restore_scheduler`` extend this to crash-consistent
+federation resume: everything the scheduler's decisions depend on — queues,
+node states, the tick counter, best scores, every RNG stream (the
+scheduler's PPAT key, each trainer's engine key and numpy generator), the
+moments accountant, retry/backoff/quarantine bookkeeping, sticky owner
+placement, and the accepted embedding tables — round-trips exactly, so a
+process killed between ticks resumes with bit-identical decisions. Device
+residency is deliberately NOT persisted: restored tables land on the
+default device and the per-device resident caches repopulate lazily on the
+first post-resume tick (visible as ``TickEngine.resident_transfers``
+growth).
 """
 from __future__ import annotations
 
@@ -12,6 +24,7 @@ import os
 from typing import Any, Dict, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.tree_util import DictKey, SequenceKey
 
@@ -59,3 +72,115 @@ def load_checkpoint(path: str, like: Any, *, shardings: Any = None) -> Tuple[Any
     if shardings is not None:
         tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
     return tree, meta
+
+
+# ---------------------------------------------------------------------------
+# crash-consistent federation scheduler resume
+# ---------------------------------------------------------------------------
+def _scheduler_tree(sched) -> Dict:
+    """The scheduler's array-valued state. One embedding copy per owner: at
+    a tick boundary ``trainer.params`` and ``best_snapshot`` are the same
+    arrays by construction (accept aliases snapshot=params, reject restores
+    params=snapshot), so the accepted snapshot is the canonical table."""
+    return {
+        "key": sched._key,
+        "trainers": {
+            n: {
+                "params": dict(sched.best_snapshot[n]),
+                "key": sched.trainers[n]._key,
+            }
+            for n in sched.trainers
+        },
+    }
+
+
+def save_scheduler(path: str, sched, *, metadata: Optional[Dict] = None) -> None:
+    """Checkpoint a ``FederationScheduler`` between ticks (atomic
+    tmp+rename, like ``save_checkpoint``). Must be called at a tick
+    boundary — mid-tick state (BUSY owners) is not a consistent cut and is
+    rejected. All scalar protocol state rides in the JSON sidecar (floats
+    round-trip exactly through ``repr``); arrays go path-keyed in the npz."""
+    from repro.core.federation import NodeState
+
+    if any(s is NodeState.BUSY for s in sched.state.values()):
+        raise ValueError(
+            "save_scheduler called mid-tick (BUSY owners); checkpoint only "
+            "at tick boundaries"
+        )
+    if set(sched.best_snapshot) != set(sched.trainers):
+        raise ValueError(
+            "save_scheduler before initial_training: no accepted snapshots"
+        )
+    meta = dict(metadata or {})
+    meta["scheduler"] = {
+        "tick": sched._tick,
+        "owners": list(sched.trainers),
+        "state": {n: s.value for n, s in sched.state.items()},
+        "queue": {n: list(q) for n, q in sched.queue.items()},
+        "best_score": {n: float(v) for n, v in sched.best_score.items()},
+        "epsilons": [float(e) for e in sched.epsilons],
+        "accountant": sched.accountant.state_dict(),
+        "retries": [[h, c, a] for (h, c), a in sched._retries.items()],
+        "peer_failures": dict(sched._peer_failures),
+        "deferred": [[r, h, c] for r, h, c in sched._deferred],
+        "quarantine_until": dict(sched._quarantine_until),
+        "placement": sched._tick_engine.placement.assignments(),
+        "rng": {
+            n: tr.rng.bit_generator.state for n, tr in sched.trainers.items()
+        },
+    }
+    save_checkpoint(path, _scheduler_tree(sched), metadata=meta)
+
+
+def restore_scheduler(path: str, sched) -> Dict:
+    """Restore a ``FederationScheduler`` (built over the same universe with
+    the same configuration) to a checkpointed tick boundary; returns the
+    user metadata. The resumed scheduler makes bit-identical decisions to
+    the uninterrupted run: every queue/state/score/RNG/accountant stream is
+    reloaded exactly. Device caches are rebuilt lazily — restored tables
+    land on the default device and migrate to their owners' sticky homes on
+    the first post-resume tick."""
+    from collections import deque
+
+    from repro.core.federation import NodeState
+
+    like = {
+        "key": sched._key,
+        "trainers": {
+            n: {"params": dict(tr.params), "key": tr._key}
+            for n, tr in sched.trainers.items()
+        },
+    }
+    tree, meta = load_checkpoint(path, like)
+    sd = meta.get("scheduler")
+    if sd is None:
+        raise ValueError(f"{path!r} is not a scheduler checkpoint")
+    if set(sd["owners"]) != set(sched.trainers):
+        raise ValueError(
+            f"checkpoint owners {sorted(sd['owners'])} != scheduler owners "
+            f"{sorted(sched.trainers)}"
+        )
+    tree = jax.tree.map(jnp.asarray, tree)
+    sched._key = tree["key"]
+    for n, tr in sched.trainers.items():
+        t = tree["trainers"][n]
+        tr.params = dict(t["params"])
+        sched.best_snapshot[n] = dict(t["params"])  # alias, like a live accept
+        tr._key = t["key"]
+        tr.rng.bit_generator.state = sd["rng"][n]
+        tr._tri_cache = None  # device-resident store rebuilds lazily
+    sched._tick = int(sd["tick"])
+    sched.state = {n: NodeState(v) for n, v in sd["state"].items()}
+    sched.queue = {n: deque(v) for n, v in sd["queue"].items()}
+    sched._queued = {n: set(v) for n, v in sd["queue"].items()}
+    sched.best_score = {n: float(v) for n, v in sd["best_score"].items()}
+    sched.epsilons = [float(e) for e in sd["epsilons"]]
+    sched.accountant.load_state_dict(sd["accountant"])
+    sched._retries = {(h, c): int(a) for h, c, a in sd["retries"]}
+    sched._peer_failures = {k: int(v) for k, v in sd["peer_failures"].items()}
+    sched._deferred = [(int(r), h, c) for r, h, c in sd["deferred"]]
+    sched._quarantine_until = {
+        k: int(v) for k, v in sd["quarantine_until"].items()
+    }
+    sched._tick_engine.placement.restore_assignments(sd["placement"])
+    return {k: v for k, v in meta.items() if k != "scheduler"}

@@ -115,6 +115,16 @@ class OwnerPlacement:
     def assignments(self) -> Dict[str, int]:
         return dict(self._slot)
 
+    def restore_assignments(self, slots: Dict[str, int]) -> None:
+        """Adopt checkpointed sticky assignments (crash-consistent resume):
+        a resumed scheduler sees owners in *resume-plan* order, not the
+        original first-sight order, so without this the homes — and hence
+        which device each owner's resident caches repopulate on — could
+        differ from the interrupted run. Slots beyond this process's device
+        count wrap (the mesh may have shrunk across the restart)."""
+        for owner, slot in slots.items():
+            self._slot[owner] = int(slot) % len(self.devices)
+
 
 def committed_device(tree) -> Optional[jax.Device]:
     """The single device a pytree is committed to, or ``None`` when its

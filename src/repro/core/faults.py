@@ -1,0 +1,254 @@
+"""Deterministic fault-injection harness for the federation stack.
+
+The paper sells FKGE as a decentralized, asynchronous, peer-to-peer
+framework, but a scheduler that assumes every peer always succeeds cannot
+claim any of those words: real federations (FedE, arXiv 2010.12882; FedR,
+arXiv 2203.09553) treat client dropout, stragglers, and partial
+participation as the normal case. This module is the chaos side of the
+fault-tolerance layer: a seeded, fully deterministic plan of injected
+failures that both tick engines honor, so the failure semantics in
+``core.federation`` / ``core.tick_engine`` can be *proved* by tests instead
+of asserted in prose.
+
+Fault kinds (one per tick entry at most):
+
+  * ``crash``    — the host owner dies mid-entry: the entry raises before
+                   any PPAT key is consumed; the scheduler isolates it,
+                   restores the host snapshot, and re-queues the handshake
+                   with exponential backoff.
+  * ``straggle`` — the entry completes but late: an injected delay is added
+                   to the entry's measured wall-clock, and a configured
+                   ``tick_deadline`` marks it a straggler — its result is
+                   discarded and the handshake deferred, without stalling
+                   the rest of the tick. (The delay is *simulated* — added
+                   to the measurement, never slept — so chaos soaks stay
+                   fast and deterministic.)
+  * ``drop``     — the client's PPAT message is lost in transit: same
+                   re-queue path as ``crash`` but attributed to the network,
+                   so neither peer accrues quarantine blame.
+  * ``corrupt``  — the client's exchanged embeddings arrive damaged
+                   (NaN or norm-bound-violating garbage rows). Detection is
+                   the receiver's job: the non-finite / norm screens on
+                   ``_ClientView`` gathers reject the handshake through the
+                   existing backtrack-restore path and blame the client.
+
+Determinism: every draw is a pure function of ``(seed, tick, host, client)``
+— no injector state feeds back into the draw — so a scheduler resumed from a
+mid-run checkpoint sees exactly the faults the uninterrupted run would have
+seen, and two engines driving the same plan inject identically.
+
+Resolution: ``kernels.dispatch.resolve_tick_faults`` /
+``REPRO_TICK_FAULTS`` / ``FederationScheduler(tick_faults=...)``. Default
+off ⇒ the injector is ``None`` and every hook is an ``is None`` check — the
+faults-off tick path stays bit-identical to the pre-fault engine.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+#: fixed draw order — segment boundaries of the uniform draw; reordering
+#: would silently change every seeded plan
+FAULT_KINDS = ("crash", "straggle", "drop", "corrupt")
+
+#: row-norm screen default: entity tables are renormalized toward unit norm
+#: every epoch, so anything beyond this is not an embedding
+DEFAULT_NORM_BOUND = 1e3
+
+
+class FaultError(RuntimeError):
+    """An injected (or detected) fault for one tick entry."""
+
+    def __init__(self, kind: str, host: str, client: Optional[str] = None):
+        super().__init__(f"fault[{kind}] host={host} client={client}")
+        self.kind = kind
+        self.host = host
+        self.client = client
+
+
+class CorruptEmbeddingError(FaultError):
+    """Incoming client embeddings failed the non-finite / norm-bound screen."""
+
+    def __init__(self, host: str, client: Optional[str], detail: str):
+        super().__init__("corrupt", host, client)
+        self.detail = detail
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One injected fault. ``delay`` is the straggle's simulated seconds;
+    ``rows`` / ``mode`` shape the corruption (NaN vs out-of-norm garbage)."""
+
+    kind: str
+    delay: float = 0.0
+    rows: int = 4
+    mode: str = "nan"  # "nan" | "garbage"
+
+
+def _stable_u32(s: str) -> int:
+    """Process- and platform-stable string hash (Python's ``hash`` is salted
+    per process, which would break cross-process fault determinism)."""
+    return zlib.crc32(s.encode("utf-8")) & 0xFFFFFFFF
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """A seeded chaos schedule: per-entry fault rates plus an optional
+    explicit ``table`` of pinned faults.
+
+    ``draw`` is stateless — ``(seed, tick, host, client)`` fully determines
+    the outcome — so plans survive checkpoint/resume and are identical under
+    both tick engines. ``until`` bounds the chaos window (ticks > ``until``
+    inject nothing), which is how soak tests let the federation heal and
+    converge after the storm.
+    """
+
+    crash: float = 0.0
+    straggle: float = 0.0
+    drop: float = 0.0
+    corrupt: float = 0.0
+    seed: int = 0
+    until: Optional[int] = None   # last tick (inclusive) that injects
+    delay: float = 1.0            # straggle: simulated seconds
+    rows: int = 4                 # corrupt: damaged row count
+    mode: str = "nan"             # corrupt: "nan" | "garbage"
+    norm_bound: float = DEFAULT_NORM_BOUND
+    table: Optional[Dict[Tuple[int, str], Fault]] = field(default=None)
+
+    def __post_init__(self):
+        for k in FAULT_KINDS:
+            r = getattr(self, k)
+            if not 0.0 <= r <= 1.0:
+                raise ValueError(f"fault rate {k}={r} outside [0, 1]")
+        if self.mode not in ("nan", "garbage"):
+            raise ValueError(f"corrupt mode {self.mode!r} (nan|garbage)")
+
+    # ------------------------------------------------------------- drawing
+    def draw(self, tick: int, host: str, client: Optional[str]) -> Optional[Fault]:
+        """The fault (if any) for this tick entry — a pure function of
+        ``(seed, tick, host, client)``. ``drop``/``corrupt`` only apply to
+        handshake entries (there is no message to lose on a self-train)."""
+        if self.table is not None:
+            hit = self.table.get((tick, host))
+            if hit is not None:
+                if client is None and hit.kind in ("drop", "corrupt"):
+                    return None
+                return hit
+        if self.until is not None and tick > self.until:
+            return None
+        rng = np.random.default_rng(
+            (self.seed, tick, _stable_u32(host), _stable_u32(client or ""))
+        )
+        u = float(rng.random())
+        lo = 0.0
+        for kind in FAULT_KINDS:
+            hi = lo + getattr(self, kind)
+            if lo <= u < hi:
+                if client is None and kind in ("drop", "corrupt"):
+                    return None
+                return Fault(
+                    kind, delay=self.delay, rows=self.rows, mode=self.mode
+                )
+            lo = hi
+        return None
+
+    # ------------------------------------------------------------- parsing
+    @classmethod
+    def parse(cls, spec: str) -> "FaultPlan":
+        """Build a plan from the ``REPRO_TICK_FAULTS`` / ``tick_faults=``
+        string grammar: comma-separated ``key=value`` pairs, e.g.
+        ``"crash=0.2,straggle=0.1,corrupt=0.1,seed=7,until=6,delay=0.5"``.
+        Bare ``"on"`` enables the layer (screens + hooks) with no injection.
+        """
+        kw: Dict[str, object] = {}
+        spec = spec.strip()
+        if spec.lower() in ("on", "screen"):
+            return cls()
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            if "=" not in part:
+                raise ValueError(f"bad tick_faults clause {part!r} (key=value)")
+            k, v = (s.strip() for s in part.split("=", 1))
+            if k in FAULT_KINDS + ("delay", "norm_bound"):
+                kw[k] = float(v)
+            elif k in ("seed", "until", "rows"):
+                kw[k] = int(v)
+            elif k == "mode":
+                kw[k] = v
+            else:
+                raise ValueError(f"unknown tick_faults key {k!r}")
+        return cls(**kw)  # type: ignore[arg-type]
+
+
+class FaultInjector:
+    """Per-scheduler wrapper around a :class:`FaultPlan`: draws faults,
+    applies embedding corruption, and keeps per-kind injection counts (pure
+    telemetry — counts never feed back into draws, so they need no
+    checkpointing)."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.counts: Dict[str, int] = {}
+
+    @property
+    def norm_bound(self) -> float:
+        return self.plan.norm_bound
+
+    def draw(self, tick: int, host: str, client: Optional[str] = None
+             ) -> Optional[Fault]:
+        f = self.plan.draw(tick, host, client)
+        if f is not None:
+            self.counts[f.kind] = self.counts.get(f.kind, 0) + 1
+        return f
+
+    def corrupt_view(self, params: Dict, fault: Fault, tick: int, host: str
+                     ) -> Dict:
+        """Damage a client-view params snapshot the way a broken peer would:
+        ``rows`` entity rows become NaN (``mode="nan"``) or garbage far past
+        the norm bound (``mode="garbage"``). Row choice is seeded by
+        ``(seed, tick, host)`` — deterministic, like every draw."""
+        import jax.numpy as jnp
+
+        rng = np.random.default_rng(
+            (self.plan.seed + 0x5EED, tick, _stable_u32(host))
+        )
+        ent = np.array(params["ent"], dtype=np.float32, copy=True)
+        n = min(max(1, fault.rows), ent.shape[0])
+        idx = rng.choice(ent.shape[0], size=n, replace=False)
+        if fault.mode == "nan":
+            ent[idx] = np.nan
+        else:
+            ent[idx] = rng.standard_normal((n, ent.shape[1])).astype(
+                np.float32
+            ) * (10.0 * self.plan.norm_bound)
+        out = dict(params)
+        out["ent"] = jnp.asarray(ent)
+        return out
+
+
+def screen_rows(rows, *, bound: float, host: str, client: Optional[str],
+                what: str = "embeddings") -> None:
+    """Receiver-side integrity screen on exchanged embedding rows: reject
+    non-finite values and row norms beyond ``bound``. Raises
+    :class:`CorruptEmbeddingError` (a :class:`FaultError`, so the scheduler
+    routes it through the backtrack-restore failure path and blames the
+    sender). Costs one host sync per gather — only wired in when a fault
+    injector is active, keeping the faults-off path untouched."""
+    a = np.asarray(rows)
+    if a.size == 0:
+        return
+    if not np.isfinite(a).all():
+        raise CorruptEmbeddingError(
+            host, client, f"non-finite values in incoming {what}"
+        )
+    worst = float(np.max(np.linalg.norm(a.reshape(a.shape[0], -1), axis=1)))
+    if worst > bound:
+        raise CorruptEmbeddingError(
+            host, client,
+            f"incoming {what} row norm {worst:.3g} exceeds bound {bound:.3g}",
+        )

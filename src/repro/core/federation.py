@@ -47,7 +47,8 @@ import numpy as np
 from repro.core.aggregation import kgemb_update, virtual_extension
 from repro.core.alignment import AlignmentRegistry
 from repro.core.ppat import PPATConfig, train_ppat
-from repro.kernels.dispatch import resolve_tick_impl
+from repro.core.privacy import MomentsAccountant
+from repro.kernels.dispatch import resolve_tick_faults, resolve_tick_impl
 from repro.kge.eval import triple_classification_accuracy
 from repro.kge.trainer import KGETrainer
 
@@ -56,6 +57,11 @@ class NodeState(enum.Enum):
     READY = "ready"
     BUSY = "busy"
     SLEEP = "sleep"
+    #: temporarily expelled from the mesh after repeated attributed failures
+    #: (crash/straggle as a host, corrupted embeddings as a client); released
+    #: back to READY after ``quarantine_ticks`` ticks. Quarantined owners
+    #: plan no entries and their queued offers are deferred, not dropped.
+    QUARANTINED = "quarantined"
 
 
 @dataclass
@@ -74,6 +80,9 @@ class FederationEvent:
     accepted: bool
     epsilon: float = float("nan")
     seconds: float = 0.0
+    #: non-None when this entry failed: "crash" | "straggle" | "drop" |
+    #: "corrupt" | "error" (an uninjected exception isolated by the tick)
+    fault: Optional[str] = None
 
 
 @dataclass
@@ -94,14 +103,29 @@ class _ClientView:
     commits every gathered row batch to the host's device — with owner-
     sticky residency the snapshot lives on the CLIENT's device, and handing
     host-side math a differently-committed operand is an error; the explicit
-    put is the client → host communication of the paper's protocol."""
+    put is the client → host communication of the paper's protocol.
 
-    def __init__(self, params: Dict[str, jnp.ndarray], model, device=None):
+    ``screen`` (a row-norm bound; only set while a fault injector is active)
+    turns every gather into the receiver-side integrity check of the
+    fault-tolerance layer: non-finite or norm-bound-violating incoming rows
+    raise ``CorruptEmbeddingError``, which the scheduler routes through the
+    backtrack-restore failure path and blames on the sending client."""
+
+    def __init__(self, params: Dict[str, jnp.ndarray], model, device=None,
+                 *, screen: Optional[float] = None, host: str = "",
+                 client: Optional[str] = None):
         self.params = params
         self.model = model
         self.device = device
+        self.screen = screen
+        self._who = (host, client)
 
     def _ship(self, rows: jnp.ndarray) -> jnp.ndarray:
+        if self.screen is not None:
+            from repro.core.faults import screen_rows
+
+            screen_rows(rows, bound=self.screen, host=self._who[0],
+                        client=self._who[1], what="client embeddings")
         return rows if self.device is None else jax.device_put(rows, self.device)
 
     def get_entity_embeddings(self, idx) -> jnp.ndarray:
@@ -135,6 +159,11 @@ class FederationScheduler:
         tick_impl: Optional[str] = None,
         tick_placement: Optional[str] = None,
         tick_residency: Optional[str] = None,
+        tick_faults=None,
+        retry_budget: int = 3,
+        backoff_ticks: int = 1,
+        quarantine_ticks: int = 4,
+        tick_deadline: Optional[float] = None,
     ):
         # score_split="test" reproduces Alg. 1 verbatim (the paper backtracks
         # on g_j.test); "valid" (default) is the leakage-free variant.
@@ -155,6 +184,15 @@ class FederationScheduler:
         # inputs and only scalars sync to host) or are staged back to the
         # default device each tick ("normalize", the legacy behavior)
         self.tick_residency = tick_residency
+        # fault-tolerance layer (None/off ⇒ bit-identical pre-fault fast
+        # path). ``tick_faults`` is a REPRO_TICK_FAULTS-style spec string, a
+        # core.faults.FaultPlan, or a FaultInjector; resolution happens per
+        # run() so an env change between runs takes effect.
+        self.tick_faults = tick_faults
+        self.retry_budget = retry_budget          # attributed failures → quarantine
+        self.backoff_ticks = backoff_ticks        # base of the exponential backoff
+        self.quarantine_ticks = quarantine_ticks  # timed release horizon
+        self.tick_deadline = tick_deadline        # per-entry straggler deadline (s)
         self.kgs = kgs
         self.registry = registry or AlignmentRegistry.from_kgs(kgs)
         families = families or {n: "transe" for n in kgs}
@@ -187,6 +225,28 @@ class FederationScheduler:
         self.best_snapshot: Dict[str, dict] = {}
         self.events: List[FederationEvent] = []
         self.epsilons: List[float] = []
+        # federation-lifetime privacy spend: every handshake's per-query
+        # moment bounds composed into one accountant (additive in α — see
+        # MomentsAccountant.merge). ``epsilons`` keeps the per-handshake
+        # history; this answers "what has the whole federation spent".
+        self.accountant = MomentsAccountant(
+            self.ppat_cfg.lam, self.ppat_cfg.delta
+        )
+        # ---- failure semantics state (all empty while faults never fire) --
+        #: consecutive failures per handshake pair (host, client) — drives
+        #: the exponential backoff of that pair's re-queued offer
+        self._retries: Dict[tuple, int] = {}
+        #: consecutive failures attributed to a peer (host for crash and
+        #: straggle, client for corrupt; drops blame nobody) — at
+        #: ``retry_budget`` the peer is quarantined
+        self._peer_failures: Dict[str, int] = {}
+        #: deferred handshake offers: (release_tick, host, client), re-queued
+        #: by plan_tick once their backoff expires
+        self._deferred: List[tuple] = []
+        #: quarantined peer → release tick
+        self._quarantine_until: Dict[str, int] = {}
+        self._injector = None          # cached resolved FaultInjector
+        self._injector_src = None
         self._tick = 0
         self._key = jax.random.PRNGKey(seed + 101)
         # backtrack-scoring inputs are built from the immutable kg splits —
@@ -343,17 +403,41 @@ class FederationScheduler:
         client: str,
         *,
         client_view: Optional[Dict[str, jnp.ndarray]] = None,
+        fault=None,
+        screen: Optional[float] = None,
+        deadline: Optional[float] = None,
     ) -> FederationEvent:
         """ActiveHandshake + KGEmb-Update + Backtrack for one (client, host).
 
         ``client_view`` optionally freezes the client's params (the planner
         passes the tick-start snapshot so serial and batched ticks read the
         same state); by default the client's live params are used.
+
+        Fault-layer hooks (all inert by default): ``fault`` is this entry's
+        injected fault (``crash``/``drop`` raise ``FaultError`` before any
+        PPAT key is consumed — the caller's failure handler isolates and
+        re-queues; a ``straggle`` adds its simulated delay to the measured
+        wall-clock), ``screen`` arms the corrupt-embedding screens on client
+        gathers, and ``deadline`` marks entries whose wall-clock exceeds it
+        as stragglers — their result is discarded via the normal backtrack
+        restore and the event carries ``fault="straggle"``.
         """
         # perf_counter: event timings must be monotonic (time.time() jumps
         # with NTP/clock adjustments)
         t0 = time.perf_counter()
-        self.state[host] = NodeState.BUSY
+        if self.state[host] is not NodeState.QUARANTINED:
+            # an owner quarantined mid-tick (blamed as the client of an
+            # earlier entry) still executes its already-planned entry, but
+            # its QUARANTINED state must survive the execution
+            self.state[host] = NodeState.BUSY
+        if fault is not None and fault.kind in ("crash", "drop"):
+            from repro.core.faults import FaultError
+
+            # the host process dies / the PPAT offer message is lost before
+            # any work happens — in particular before the key split, so the
+            # retried handshake draws from the same stream position the
+            # batched engine would
+            raise FaultError(fault.kind, host, client)
         ent = self.registry.entities(client, host)
         rel = self.registry.relations(client, host)
         hos_tr = self.trainers[host]
@@ -367,6 +451,7 @@ class FederationScheduler:
             client_view or dict(self.trainers[client].params),
             self.trainers[client].model,
             device=committed_device(hos_tr.params),
+            screen=screen, host=host, client=client,
         )
 
         idx_c, idx_h = ent
@@ -379,6 +464,7 @@ class FederationScheduler:
         self._key, sub = jax.random.split(self._key)
         ppat_client, ppat_host, hist = train_ppat(x, y, self.ppat_cfg, key=sub)
         self.epsilons.append(hist["epsilon"])
+        self.accountant.merge(ppat_host.accountant)  # federation-lifetime ε
 
         # DP-synthesized embeddings for the aligned set, host side. Generate
         # and refine on the PPAT_BUCKET-padded aligned set (zero rows beyond
@@ -423,44 +509,203 @@ class FederationScheduler:
 
         before = self.best_score[host]
         after = self.score_fn(host)
-        accepted = after > before
+        jax.block_until_ready(hos_tr.params)  # time executed work, not enqueue
+        # straggler deadline: the result arrived, but too late to merge this
+        # tick — discard it through the normal backtrack restore and let the
+        # caller's failure handler defer the handshake. Injected straggles
+        # contribute their *simulated* delay; a genuinely slow entry trips
+        # the same deadline.
+        elapsed = time.perf_counter() - t0
+        if fault is not None and fault.kind == "straggle":
+            elapsed += fault.delay
+        straggled = deadline is not None and elapsed > deadline
+        accepted = after > before and not straggled
         if accepted:  # Backtrack (Alg. 1 l. 17)
             self.best_score[host] = after
             self.best_snapshot[host] = hos_tr.snapshot()
         else:
             hos_tr.restore(self.best_snapshot[host])
-        self.state[host] = NodeState.READY
-        jax.block_until_ready(hos_tr.params)  # time executed work, not enqueue
+        if self.state[host] is NodeState.BUSY:
+            # conditional: a mid-tick quarantine (this host blamed as the
+            # client of another entry) must survive its own entry completing
+            self.state[host] = NodeState.READY
         ev = FederationEvent(
             self._tick, host, client, "ppat", before, after, accepted,
-            epsilon=hist["epsilon"], seconds=time.perf_counter() - t0,
+            epsilon=hist["epsilon"], seconds=elapsed,
+            fault="straggle" if straggled else None,
         )
         self.events.append(ev)
         if accepted:
             self.broadcast(host)
+        if not straggled:
+            self._note_entry_ok(host, client)
         return ev
 
-    def self_train_once(self, name: str) -> FederationEvent:
+    def self_train_once(
+        self,
+        name: str,
+        *,
+        fault=None,
+        deadline: Optional[float] = None,
+    ) -> FederationEvent:
         """Alg. 1 ll. 23–27: local iterative training when the queue is empty."""
         t0 = time.perf_counter()
+        if fault is not None and fault.kind == "crash":
+            from repro.core.faults import FaultError
+
+            raise FaultError("crash", name, None)
         tr = self.trainers[name]
         tr.train_epochs(self.update_epochs)
         before = self.best_score[name]
         after = self.score_fn(name)
-        accepted = after > before
+        jax.block_until_ready(tr.params)  # time executed work, not enqueue
+        elapsed = time.perf_counter() - t0
+        if fault is not None and fault.kind == "straggle":
+            elapsed += fault.delay
+        straggled = deadline is not None and elapsed > deadline
+        accepted = after > before and not straggled
         if accepted:
             self.best_score[name] = after
             self.best_snapshot[name] = tr.snapshot()
             self.broadcast(name)
         else:
             tr.restore(self.best_snapshot[name])
-        jax.block_until_ready(tr.params)  # time executed work, not enqueue
         ev = FederationEvent(
             self._tick, name, None, "self-train", before, after, accepted,
-            seconds=time.perf_counter() - t0,
+            seconds=elapsed, fault="straggle" if straggled else None,
         )
         self.events.append(ev)
+        if not straggled:
+            self._note_entry_ok(name)
         return ev
+
+    # -------------------------------------------------- failure semantics
+    def _note_entry_ok(self, host: str, client: Optional[str] = None) -> None:
+        """A completed entry clears its pair's retry backoff and both
+        participants' attributed-failure counts (quarantine counts
+        consecutive failures, not lifetime ones)."""
+        self._retries.pop((host, client), None)
+        self._peer_failures.pop(host, None)
+        if client is not None:
+            self._peer_failures.pop(client, None)
+
+    def _entry_failed(
+        self,
+        host: str,
+        client: Optional[str],
+        fault_kind: str,
+        *,
+        emit: bool = True,
+    ) -> None:
+        """Isolate one failed tick entry: restore the host to its best
+        snapshot, emit the fault event, re-queue the handshake with
+        exponential backoff, and attribute blame toward quarantine
+        (crash/straggle/error → host, corrupt → the sending client,
+        drop → the network, i.e. nobody)."""
+        snap = self.best_snapshot.get(host)
+        if snap is not None:
+            self.trainers[host].restore(snap)
+        if self.state[host] is NodeState.BUSY:
+            self.state[host] = NodeState.READY
+        if emit:
+            before = self.best_score.get(host, float("nan"))
+            self.events.append(FederationEvent(
+                self._tick, host, client,
+                "ppat" if client is not None else "self-train",
+                before, before, False, fault=fault_kind,
+            ))
+        if client is not None:
+            att = self._retries.get((host, client), 0) + 1
+            self._retries[(host, client)] = att
+            release = self._tick + self.backoff_ticks * (2 ** min(att - 1, 6))
+            self._deferred.append((release, host, client))
+        peer = {"corrupt": client, "drop": None}.get(fault_kind, host)
+        if peer is not None:
+            n = self._peer_failures.get(peer, 0) + 1
+            self._peer_failures[peer] = n
+            if n >= self.retry_budget:
+                self._quarantine(peer)
+
+    def _quarantine(self, peer: str) -> None:
+        """Expel a repeatedly-failing peer from the mesh for
+        ``quarantine_ticks`` ticks; its queued offers are deferred by
+        ``_next_offer`` and it plans no entries until the timed release."""
+        self.state[peer] = NodeState.QUARANTINED
+        self._quarantine_until[peer] = self._tick + self.quarantine_ticks
+        self._peer_failures.pop(peer, None)
+
+    def _release_due(self) -> None:
+        """Timed releases, run at plan time before entries are chosen:
+        quarantined peers whose sentence expired return to READY, and
+        deferred offers whose backoff expired re-enter their host's queue
+        (deduped, with the usual sleep wake-up)."""
+        for peer, until in list(self._quarantine_until.items()):
+            if self._tick >= until:
+                del self._quarantine_until[peer]
+                if self.state[peer] is NodeState.QUARANTINED:
+                    self.state[peer] = NodeState.READY
+        still: List[tuple] = []
+        for release, host, client in self._deferred:
+            if self._tick < release:
+                still.append((release, host, client))
+                continue
+            if client not in self._queued[host]:
+                self.queue[host].append(client)
+                self._queued[host].add(client)
+            if self.state[host] is NodeState.SLEEP:
+                self.state[host] = NodeState.READY
+        self._deferred = still
+
+    def _next_offer(self, name: str) -> Optional[str]:
+        """Front-of-queue client for this owner, skipping quarantined
+        clients — their offers are deferred until the quarantine release,
+        not dropped. Identical to a plain pop while no peer is quarantined
+        (the faults-off bit-parity path)."""
+        while self.queue[name]:
+            client = self._pop_offer(name)
+            if self.state.get(client) is NodeState.QUARANTINED:
+                release = self._quarantine_until.get(client, self._tick + 1)
+                self._deferred.append((release, name, client))
+                continue
+            return client
+        return None
+
+    def _unwind_plan(self, plan: List["TickEntry"], done) -> None:
+        """Exception-safety for ``run``: put the un-executed remainder of a
+        plan back where ``plan_tick`` found it — handshake offers return to
+        the FRONT of their host's queue in plan order, BUSY hosts reset to
+        READY — so the scheduler stays re-runnable after an unexpected
+        failure instead of silently dropping queued work."""
+        for e in reversed(plan):
+            if e.host in done:
+                continue
+            if e.kind == "ppat" and e.client not in self._queued[e.host]:
+                self.queue[e.host].appendleft(e.client)
+                self._queued[e.host].add(e.client)
+            if self.state[e.host] is NodeState.BUSY:
+                self.state[e.host] = NodeState.READY
+
+    def _fault_injector(self, tick_faults=None):
+        """Resolve the fault layer (call-site arg > constructor > env) to a
+        cached ``FaultInjector``, or ``None`` when off — the default, in
+        which case every hook downstream is an ``is None`` check."""
+        src = resolve_tick_faults(
+            tick_faults if tick_faults is not None else self.tick_faults
+        )
+        if src is None:
+            self._injector = self._injector_src = None
+            return None
+        from repro.core.faults import FaultInjector, FaultPlan
+
+        if isinstance(src, FaultInjector):
+            self._injector = self._injector_src = src
+            return src
+        if self._injector is not None and self._injector_src == src:
+            return self._injector
+        plan = src if isinstance(src, FaultPlan) else FaultPlan.parse(src)
+        self._injector = FaultInjector(plan)
+        self._injector_src = src
+        return self._injector
 
     # -------------------------------------------------------------- loop
     def plan_tick(self, *, self_train: bool = True) -> List[TickEntry]:
@@ -469,13 +714,18 @@ class FederationScheduler:
         self-train), owners with nothing to do go to Sleep. Offers are popped
         and client views frozen NOW — broadcasts emitted while the tick
         executes only affect later ticks, which is what makes the plan a
-        fixed unit of device work for the batched engine."""
+        fixed unit of device work for the batched engine.
+
+        Fault-layer bookkeeping happens first: expired quarantines release,
+        and deferred offers whose backoff lapsed re-enter their queues —
+        both no-ops while no fault ever fired."""
+        self._release_due()
         entries: List[TickEntry] = []
         for name in self.trainers:
             if self.state[name] is not NodeState.READY:
                 continue
-            if self.queue[name]:
-                client = self._pop_offer(name)
+            client = self._next_offer(name)
+            if client is not None:
                 entries.append(TickEntry(
                     name, "ppat", client,
                     client_view=dict(self.trainers[client].params),
@@ -494,17 +744,29 @@ class FederationScheduler:
         tick_impl: Optional[str] = None,
         tick_placement: Optional[str] = None,
         tick_residency: Optional[str] = None,
+        tick_faults=None,
     ) -> Dict[str, float]:
-        """Scheduler ticks until quiescence (all queues empty, no improvement)
-        or ``max_ticks``. Each tick serves every Ready owner once, per the
-        tick-start plan. ``tick_impl`` ("batched" | "reference"),
-        ``tick_placement`` ("auto" | "single" | "sharded") and
-        ``tick_residency`` ("auto" | "resident" | "normalize") override the
-        constructor/env-resolved engine, device placement, and output
-        residency for this run."""
+        """Scheduler ticks until quiescence (all queues empty, no improvement,
+        nothing deferred or quarantined) or ``max_ticks``. Each tick serves
+        every Ready owner once, per the tick-start plan. ``tick_impl``
+        ("batched" | "reference"), ``tick_placement``
+        ("auto" | "single" | "sharded"), ``tick_residency``
+        ("auto" | "resident" | "normalize") and ``tick_faults`` (a
+        ``REPRO_TICK_FAULTS``-style spec / ``FaultPlan`` / ``FaultInjector``)
+        override the constructor/env-resolved engine, device placement,
+        output residency, and fault layer for this run.
+
+        Failure semantics: one failing entry never aborts its tick — it is
+        isolated, its host restored from the best snapshot, and the
+        handshake re-queued with exponential backoff (``_entry_failed``);
+        an *unexpected* exception unwinds the plan's un-executed remainder
+        back into the queues before propagating, so the scheduler is always
+        re-runnable."""
         impl = resolve_tick_impl(
             tick_impl if tick_impl is not None else self.tick_impl
         )
+        injector = self._fault_injector(tick_faults)
+        deadline = self.tick_deadline
         if impl == "batched":
             # validate BEFORE any plan pops offers: the host-loop dense
             # training step cannot be embedded in a tick program, and
@@ -522,20 +784,88 @@ class FederationScheduler:
             self._tick += 1
             plan = self.plan_tick(self_train=self_train)
             if impl == "batched" and plan:
-                events = self._tick_engine.execute(
-                    plan, self._tick, placement=tick_placement,
-                    residency=tick_residency,
-                )
-            else:
-                events = [
-                    self.federate_once(
-                        e.host, e.client, client_view=e.client_view
+                try:
+                    events = self._tick_engine.execute(
+                        plan, self._tick, placement=tick_placement,
+                        residency=tick_residency, faults=injector,
+                        deadline=deadline,
                     )
-                    if e.kind == "ppat"
-                    else self.self_train_once(e.host)
-                    for e in plan
-                ]
+                except Exception:
+                    done = {
+                        ev.host for ev in self.events if ev.tick == self._tick
+                    }
+                    self._unwind_plan(plan, done)
+                    raise
+            else:
+                events = self._run_serial(plan, injector, deadline)
             any_progress = any(ev.accepted for ev in events)
-            if not any_progress and all(not q for q in self.queue.values()):
+            if (
+                not any_progress
+                and all(not q for q in self.queue.values())
+                and not self._deferred
+                and not self._quarantine_until
+            ):
                 break  # "whole training continues until no more improvement"
         return dict(self.best_score)
+
+    def _run_serial(
+        self, plan: List[TickEntry], injector, deadline: Optional[float]
+    ) -> List[FederationEvent]:
+        """Reference-engine tick execution with per-entry fault isolation.
+        With ``injector=None`` this is exactly the pre-fault serial loop."""
+        from repro.core.faults import FaultError
+
+        events: List[FederationEvent] = []
+        done: set = set()
+        screen = injector.norm_bound if injector is not None else None
+        for e in plan:
+            fault = (
+                injector.draw(self._tick, e.host, e.client)
+                if injector is not None else None
+            )
+            view = e.client_view
+            if (
+                fault is not None and fault.kind == "corrupt"
+                and e.kind == "ppat"
+            ):
+                view = injector.corrupt_view(view, fault, self._tick, e.host)
+            try:
+                if e.kind == "ppat":
+                    if injector is not None:
+                        # up-front receiver screen over every row this entry
+                        # will read (aligned + virtual neighbors) — detection
+                        # happens BEFORE any key is consumed, keeping the
+                        # serial and batched key streams in lockstep (the
+                        # per-gather screens below stay as defense in depth)
+                        from repro.core.faults import screen_rows
+
+                        pair = self._tick_engine._pair_info(e.client, e.host)
+                        screen_rows(
+                            np.asarray(view["ent"])[pair["screen_idx"]],
+                            bound=screen, host=e.host, client=e.client,
+                            what="client embeddings",
+                        )
+                    ev = self.federate_once(
+                        e.host, e.client, client_view=view, fault=fault,
+                        screen=screen, deadline=deadline,
+                    )
+                else:
+                    ev = self.self_train_once(
+                        e.host, fault=fault, deadline=deadline
+                    )
+            except FaultError as fe:
+                self._entry_failed(e.host, e.client, fe.kind)
+                done.add(e.host)
+                events.append(self.events[-1])
+                continue
+            except Exception:
+                snap = self.best_snapshot.get(e.host)
+                if snap is not None:
+                    self.trainers[e.host].restore(snap)
+                self._unwind_plan(plan, done)
+                raise
+            done.add(e.host)
+            events.append(ev)
+            if ev.fault == "straggle":
+                self._entry_failed(e.host, e.client, "straggle", emit=False)
+        return events

@@ -61,6 +61,39 @@ class MomentsAccountant:
         self.alpha += bound.sum(axis=0)
         self.queries += int(gap.size)
 
+    def merge(self, other: "MomentsAccountant") -> None:
+        """Fold another accountant's spend into this one. Moment bounds are
+        additive across queries (Eq. 9 accumulates per query), so merging a
+        per-handshake accountant into a federation-lifetime one yields the
+        composed bound bit-for-bit — the scheduler uses this to keep a
+        cumulative ε across every handshake it ever executed."""
+        if (self.lam, self.delta) != (other.lam, other.delta) or \
+                self.ls.shape != other.ls.shape:
+            raise ValueError("cannot merge accountants with different "
+                             "(lam, delta, max_moment)")
+        self.alpha += other.alpha
+        self.queries += other.queries
+
+    def state_dict(self) -> dict:
+        """JSON-serializable snapshot for crash-consistent scheduler resume
+        (``checkpoint.save_scheduler``). Floats round-trip exactly through
+        ``repr`` — the restored accountant reports bit-identical ε."""
+        return {
+            "lam": self.lam,
+            "delta": self.delta,
+            "alpha": [float(a) for a in self.alpha],
+            "queries": int(self.queries),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        if (float(state["lam"]), float(state["delta"])) != (self.lam, self.delta):
+            raise ValueError("checkpointed accountant (lam, delta) mismatch")
+        alpha = np.asarray(state["alpha"], dtype=np.float64)
+        if alpha.shape != self.alpha.shape:
+            raise ValueError("checkpointed accountant moment range mismatch")
+        self.alpha = alpha
+        self.queries = int(state["queries"])
+
     def epsilon(self) -> float:
         """ε̂ = min_l (α(l) + log(1/δ)) / l — Eq. 8."""
         return float(np.min((self.alpha + np.log(1.0 / self.delta)) / self.ls))

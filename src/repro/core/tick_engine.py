@@ -419,6 +419,10 @@ class TickEngine:
         n_true = len(idx_c) + (len(rel[0]) if has_rel else 0)
         arrays: Dict[str, jnp.ndarray] = {}
         info = {"n_aligned": n_true, "arrays": arrays}
+        # client-entity rows this handshake actually reads (aligned set,
+        # plus virtual neighbors below) — the receiver-side corrupt screen
+        # checks exactly these, matching the serial path's gather screens
+        screen_idx = np.asarray(idx_c, np.int64)
         if has_rel:
             # exact-shape glue (see entry_graph) — no index padding
             arrays["idx_c"] = jnp.asarray(idx_c, jnp.int32)
@@ -462,6 +466,10 @@ class TickEngine:
                 rpad[: len(rels)] = rels
                 arrays["neigh"] = jnp.asarray(npad)
                 arrays["rels"] = jnp.asarray(rpad)
+                screen_idx = np.concatenate(
+                    [screen_idx, np.asarray(neigh, np.int64)]
+                )
+        info["screen_idx"] = screen_idx
         # extended triple store: train + virtual adjacency, cycle-padded —
         # immutable per pair, so upload + pad once instead of per handshake
         tr = sched.kgs[host].train
@@ -587,9 +595,14 @@ class TickEngine:
         owners: List[str],
         placement: str,
         residency: str,
-    ) -> List[Dict]:
-        """Launch every entry program asynchronously; returns per-entry
-        output pytrees (unmaterialized) in plan order.
+    ) -> Tuple[List[Optional[Dict]], List[Optional[Exception]],
+               List[Optional[Tuple[int, ...]]]]:
+        """Launch every entry program asynchronously; returns
+        ``(outs, errs, groups)`` in plan order: per-entry output pytrees
+        (unmaterialized), per-entry dispatch exceptions, and for each entry
+        the tuple of plan indices sharing its shard_map group output
+        (``None`` for singletons) so the blocking phase can fall back when a
+        group failure only surfaces at execution time.
 
         ``single``: every entry runs its signature's program on the default
         device. ``sharded``: entries are bucketed by signature and ordered
@@ -606,15 +619,33 @@ class TickEngine:
         bucket composition converges to zero per-tick movement too, with the
         per-device input caches absorbing the immutables). Group programs
         compile per (signature, chunk extent) — extents restricted to
-        ``{devices} ∪ {2^k}`` cap that at ~log₂(devices) per signature."""
-        outs: List[Optional[Dict]] = [None] * len(specs)
+        ``{devices} ∪ {2^k}`` cap that at ~log₂(devices) per signature.
+
+        Fault isolation: each dispatch unit is wrapped, so one bad entry
+        records a per-entry error instead of aborting the tick, and a
+        shard_map group that fails AT DISPATCH falls back to per-entry
+        execution of its members on their home devices — one poisoned owner
+        never sinks its bucket-mates. Entries whose spec is ``None`` were
+        already isolated by the fault layer and are skipped."""
+        n = len(specs)
+        outs: List[Optional[Dict]] = [None] * n
+        errs: List[Optional[Exception]] = [None] * n
+        groups: List[Optional[Tuple[int, ...]]] = [None] * n
         devices = jax.devices()
+
+        def single(i: int, device) -> None:
+            try:
+                outs[i] = _entry_program(specs[i])(
+                    self._materialize(protos[i], device)
+                )
+            except Exception as ex:  # noqa: BLE001 — isolate, don't abort
+                errs[i] = ex
+
         if placement == "single":
             for i, spec in enumerate(specs):
-                outs[i] = _entry_program(spec)(
-                    self._materialize(protos[i], devices[0])
-                )
-            return outs
+                if spec is not None:
+                    single(i, devices[0])
+            return outs, errs, groups
 
         from repro.core.distributed import (
             assemble_group,
@@ -624,6 +655,8 @@ class TickEngine:
 
         buckets: Dict[Tuple, List[int]] = {}
         for i, (spec, proto) in enumerate(zip(specs, protos)):
+            if spec is None:
+                continue
             sig = entry_signature(spec, self._base_view(proto))
             buckets.setdefault(sig, []).append(i)
         for sig, idxs in buckets.items():
@@ -643,29 +676,33 @@ class TickEngine:
                     # owner-sticky singleton: runs on (and leaves its
                     # results committed to) the owner's home device, no
                     # matter how the rest of the plan is composed
-                    dev = self.placement.device(owners[i])
-                    outs[i] = _entry_program(spec)(
-                        self._materialize(protos[i], dev)
-                    )
+                    single(i, self.placement.device(owners[i]))
                     continue
-                entries = [
-                    self._materialize(protos[i], devices[k])
-                    for k, i in enumerate(chunk)
-                ]
-                for k in range(real, extent):  # masked dummy tail
-                    entries.append(
-                        self._materialize(protos[chunk[-1]], devices[k])
+                try:
+                    members = [
+                        self._materialize(protos[i], devices[k])
+                        for k, i in enumerate(chunk)
+                    ]
+                    for k in range(real, extent):  # masked dummy tail
+                        members.append(
+                            self._materialize(protos[chunk[-1]], devices[k])
+                        )
+                    out = _group_program(spec, extent)(
+                        assemble_group(members, extent)
                     )
-                out = _group_program(spec, extent)(
-                    assemble_group(entries, extent)
-                )
+                except Exception:  # noqa: BLE001 — group fallback
+                    for i in chunk:
+                        single(i, self.placement.device(owners[i]))
+                    continue
                 # dummy-position outputs are simply never read
                 for shard, i in zip(disassemble_group(out, extent), chunk):
                     outs[i] = shard
+                    groups[i] = tuple(chunk)
         if residency == "normalize":
             # legacy behavior: stage every result back to the default device
+            # (None is an empty pytree node, so failed slots pass through)
             outs = jax.device_put(outs, devices[0])
-        return outs
+        return outs, errs, groups
 
     def execute(
         self,
@@ -674,10 +711,25 @@ class TickEngine:
         *,
         placement: Optional[str] = None,
         residency: Optional[str] = None,
+        faults=None,
+        deadline: Optional[float] = None,
     ) -> List:
         """Run one planned tick batched; returns the FederationEvents, in
         plan order, with protocol side effects (accept/reject, snapshot,
-        broadcast, ε accounting) applied exactly as the serial path does."""
+        broadcast, ε accounting) applied exactly as the serial path does.
+
+        ``faults`` (a ``core.faults.FaultInjector``, default ``None`` = the
+        bit-identical pre-fault path) injects this tick's planned faults at
+        the same protocol points as the serial engine: crash/drop isolate an
+        entry BEFORE its PPAT key split and engine-key consume (so surviving
+        entries draw from the same stream positions either engine would give
+        them), corrupt client views are screened at proto-build time over
+        exactly the rows the serial gathers read, and straggles add their
+        simulated delay to the entry's measured wall-clock, tripping
+        ``deadline`` — late results are discarded through the normal
+        backtrack restore and the handshake deferred. One failing entry
+        never aborts the tick."""
+        from repro.core.faults import CorruptEmbeddingError, screen_rows
         from repro.core.federation import FederationEvent, NodeState
         from repro.kge.eval import _metrics, best_threshold_accuracy
         from repro.kernels.dispatch import (
@@ -708,14 +760,57 @@ class TickEngine:
                 "step (REPRO_TRAIN_IMPL=reference); run with "
                 "tick_impl='reference' instead"
             )
-        specs: List[EntrySpec] = []
-        protos: List[Tuple[Dict, List]] = []
-        owners: List[str] = []
-        for e in entries:
+        n = len(entries)
+        specs: List[Optional[EntrySpec]] = [None] * n
+        protos: List[Optional[Tuple[Dict, List]]] = [None] * n
+        owners: List[str] = [e.host for e in entries]
+        entry_faults: List = [None] * n
+        #: FederationEvents of entries isolated before dispatch
+        pre_events: List[Optional[FederationEvent]] = [None] * n
+        for i, e in enumerate(entries):
             tr = sched.trainers[e.host]
-            sched.state[e.host] = NodeState.BUSY
+            fault = (
+                faults.draw(tick, e.host, e.client)
+                if faults is not None else None
+            )
+            entry_faults[i] = fault
+            if fault is not None and fault.kind in ("crash", "drop"):
+                # host dies / offer message lost before any work — isolated
+                # BEFORE the PPAT key split and the engine-key consume, so
+                # surviving entries draw from the same stream positions the
+                # serial path would give them
+                sched._entry_failed(
+                    e.host, e.client if e.kind == "ppat" else None, fault.kind
+                )
+                pre_events[i] = sched.events[-1]
+                continue
             metric = self._metric_kind()
             score_info = self._score_info(e.host)
+            pair = cview = None
+            if e.kind == "ppat":
+                pair = self._pair_info(e.client, e.host)
+                cview = e.client_view or dict(sched.trainers[e.client].params)
+                if fault is not None and fault.kind == "corrupt":
+                    cview = faults.corrupt_view(cview, fault, tick, e.host)
+                if faults is not None:
+                    # receiver-side integrity screen over exactly the rows
+                    # the serial path's gathers read (aligned + virtual
+                    # neighbors), before any key is consumed — the engines
+                    # stay in lockstep on every stream
+                    try:
+                        screen_rows(
+                            np.asarray(cview["ent"])[pair["screen_idx"]],
+                            bound=faults.norm_bound, host=e.host,
+                            client=e.client, what="client embeddings",
+                        )
+                    except CorruptEmbeddingError:
+                        sched._entry_failed(e.host, e.client, "corrupt")
+                        pre_events[i] = sched.events[-1]
+                        continue
+            if sched.state[e.host] is not NodeState.QUARANTINED:
+                # a mid-tick quarantine (this owner blamed as the client of
+                # an earlier entry) survives its already-planned execution
+                sched.state[e.host] = NodeState.BUSY
             # per-tick mutable leaves (explicit device_put at placement
             # time); everything else is referenced from the per-device
             # resident caches via (info, {input name: cache key}) entries
@@ -740,8 +835,6 @@ class TickEngine:
                 block_e=512,
             )
             if e.kind == "ppat":
-                pair = self._pair_info(e.client, e.host)
-                cview = e.client_view or dict(sched.trainers[e.client].params)
                 sched._key, sub = jax.random.split(sched._key)
                 # the client view is the paper's client → host communication
                 # — per-tick state, shipped to the host's device explicitly
@@ -775,19 +868,64 @@ class TickEngine:
                     score_info,
                     {"test": "test", "filt_t": "filt_t", "filt_h": "filt_h"},
                 ))
-            specs.append(EntrySpec(**kw))
-            protos.append((mut, res))
-            owners.append(e.host)
+            specs[i] = EntrySpec(**kw)
+            protos[i] = (mut, res)
 
-        outs = self._dispatch(specs, protos, owners, placement, residency)
-        outs = jax.block_until_ready(outs)
+        outs, errs, groups = self._dispatch(
+            specs, protos, owners, placement, residency
+        )
+        # block per entry so one failing program poisons one entry, not the
+        # tick; a shard_map group whose failure only surfaces at execution
+        # time is re-dispatched per-entry on the members' home devices (the
+        # group's healthy owners still land their results)
+        retried: set = set()
+        for i in range(n):
+            if outs[i] is None or errs[i] is not None:
+                continue
+            try:
+                outs[i] = jax.block_until_ready(outs[i])
+            except Exception as ex:  # noqa: BLE001 — isolate, don't abort
+                g = groups[i]
+                if g is None or g in retried:
+                    errs[i] = ex
+                    continue
+                retried.add(g)
+                for j in g:
+                    groups[j] = None
+                    try:
+                        outs[j] = _entry_program(specs[j])(
+                            self._materialize(
+                                protos[j], self.placement.device(owners[j])
+                            )
+                        )
+                    except Exception as e2:  # noqa: BLE001
+                        outs[j], errs[j] = None, e2
+                if errs[i] is None:
+                    try:
+                        outs[i] = jax.block_until_ready(outs[i])
+                    except Exception as e3:  # noqa: BLE001
+                        errs[i] = e3
         # honest AND monotonic: outputs are materialized, and perf_counter
         # is immune to wall-clock adjustments (time.time() is not)
         seconds = time.perf_counter() - t0
 
         events = []
-        for e, spec, out in zip(entries, specs, outs):
+        for i, e in enumerate(entries):
+            if pre_events[i] is not None:
+                events.append(pre_events[i])
+                continue
+            spec, out = specs[i], outs[i]
+            if out is None or errs[i] is not None:
+                # an uninjected exception the dispatch/blocking phase
+                # isolated: same failure path as a crash, attributed to the
+                # host, kind "error"
+                sched._entry_failed(
+                    e.host, e.client if e.kind == "ppat" else None, "error"
+                )
+                events.append(sched.events[-1])
+                continue
             tr = sched.trainers[e.host]
+            fault = entry_faults[i]
             epsilon = float("nan")
             if e.kind == "ppat":
                 acct = MomentsAccountant(sched.ppat_cfg.lam, sched.ppat_cfg.delta)
@@ -796,6 +934,7 @@ class TickEngine:
                 )
                 epsilon = acct.epsilon()
                 sched.epsilons.append(epsilon)
+                sched.accountant.merge(acct)  # federation-lifetime ε
             before = sched.best_score[e.host]
             if spec.score == "accuracy":
                 sp, sn = (np.asarray(v) for v in out["score"])
@@ -806,28 +945,42 @@ class TickEngine:
                 for ci, (ct, ch) in zip(
                     range(0, ntest, spec.lp_batch), out["score"]
                 ):
-                    n = len(np.asarray(ct))
-                    ranks[2 * ci : 2 * (ci + n) : 2] = np.asarray(ct) + 1
-                    ranks[2 * ci + 1 : 2 * (ci + n) : 2] = np.asarray(ch) + 1
+                    nc = len(np.asarray(ct))
+                    ranks[2 * ci : 2 * (ci + nc) : 2] = np.asarray(ct) + 1
+                    ranks[2 * ci + 1 : 2 * (ci + nc) : 2] = np.asarray(ch) + 1
                 after = _metrics(ranks)["hit@10"]
             else:  # custom score_fn: score host-side on the candidate params
                 tr.params = dict(out["params"])
                 after = sched.score_fn(e.host)
-            accepted = after > before
+            # straggler deadline: the entry's result arrived, but too late
+            # to merge — injected straggles contribute their simulated delay
+            elapsed = seconds
+            if fault is not None and fault.kind == "straggle":
+                elapsed += fault.delay
+            straggled = deadline is not None and elapsed > deadline
+            accepted = after > before and not straggled
             if accepted:
                 tr.params = dict(out["params"])
                 sched.best_score[e.host] = after
                 sched.best_snapshot[e.host] = tr.snapshot()
             else:
                 tr.restore(sched.best_snapshot[e.host])
-            sched.state[e.host] = NodeState.READY
+            if sched.state[e.host] is NodeState.BUSY:
+                # conditional: a mid-tick quarantine (this host blamed as
+                # the client of another entry) survives its own completion
+                sched.state[e.host] = NodeState.READY
             ev = FederationEvent(
                 tick, e.host, e.client,
                 "ppat" if e.kind == "ppat" else "self-train",
-                before, after, accepted, epsilon=epsilon, seconds=seconds,
+                before, after, accepted, epsilon=epsilon, seconds=elapsed,
+                fault="straggle" if straggled else None,
             )
             sched.events.append(ev)
             events.append(ev)
             if accepted:
                 sched.broadcast(e.host)
+            if straggled:
+                sched._entry_failed(e.host, e.client, "straggle", emit=False)
+            else:
+                sched._note_entry_ok(e.host, e.client)
         return events

@@ -159,6 +159,28 @@ def resolve_tick_residency(residency: Optional[str] = None) -> str:
     return residency
 
 
+def resolve_tick_faults(spec=None):
+    """Resolve the federation fault-injection layer: returns ``None`` (off —
+    the default, keeping the tick fast path bit-identical to the pre-fault
+    engine) or a fault-plan description the scheduler hands to
+    ``core.faults.FaultPlan.parse``.
+
+    ``spec`` may be a spec string, an already-built ``FaultPlan`` /
+    ``FaultInjector`` (handed through verbatim — the test harness path), or
+    ``None`` to consult ``REPRO_TICK_FAULTS``. Off-values (``off``/``0``/
+    ``false``/``none``/empty) resolve to ``None``.
+    """
+    if spec is not None and not isinstance(spec, str):
+        return spec  # FaultPlan / FaultInjector passed programmatically
+    if spec is None:
+        spec = os.environ.get("REPRO_TICK_FAULTS", "").strip() or None
+    if spec is None:
+        return None
+    if spec.strip().lower() in _FALSY + ("", "none"):
+        return None
+    return spec
+
+
 def resolve_rank_impl(impl: Optional[str] = None) -> str:
     """Pick the fused-rank engine implementation: ``pallas`` or ``xla``.
 

@@ -172,7 +172,9 @@ class Request:
     temperature: float = 0.0
     generated: List[int] = field(default_factory=list)
     done: bool = False
-    submitted_at: float = field(default_factory=time.time)
+    # perf_counter: latency math (finished_at - submitted_at) must be
+    # monotonic; time.time() jumps with NTP/clock adjustments
+    submitted_at: float = field(default_factory=time.perf_counter)
     finished_at: Optional[float] = None
 
 
@@ -260,7 +262,7 @@ class ServingEngine:
         for slot, req in enumerate(self.slot_req):
             if req is not None and len(req.generated) >= req.max_new_tokens:
                 req.done = True
-                req.finished_at = time.time()
+                req.finished_at = time.perf_counter()
                 self.finished.append(req)
                 self.slot_req[slot] = None
                 self.lengths[slot] = 0

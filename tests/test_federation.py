@@ -150,3 +150,273 @@ def test_rejected_backtrack_restores_bit_identical_params(universe, tick_impl):
                 np.asarray(fed.trainers[n].params[k]), v,
                 err_msg=f"{tick_impl}: {n}.{k} not restored bit-identically",
             )
+
+
+# ----------------------------------------------------------- fault tolerance
+from repro.core.faults import Fault, FaultInjector, FaultPlan  # noqa: E402
+
+
+def _mini_fed(universe, **kw):
+    defaults = dict(
+        dim=16, ppat_cfg=PPATConfig(steps=3, seed=0),
+        local_epochs=2, update_epochs=1, seed=0,
+    )
+    defaults.update(kw)
+    return FederationScheduler(universe, **defaults)
+
+
+def _event_key(e):
+    # repr-compare floats: exact, and NaN == NaN (plain float compare isn't)
+    return (e.tick, e.host, e.client or "", e.kind, e.fault or "", e.accepted,
+            repr(e.score_before), repr(e.score_after), repr(e.epsilon))
+
+
+def test_fault_plan_parse_and_determinism():
+    plan = FaultPlan.parse("crash=0.3,straggle=0.2,seed=9,until=5,delay=0.25")
+    assert plan.crash == 0.3 and plan.straggle == 0.2
+    assert plan.seed == 9 and plan.until == 5 and plan.delay == 0.25
+    draws = [plan.draw(t, "A", "B") for t in range(1, 20)]
+    assert draws == [plan.draw(t, "A", "B") for t in range(1, 20)]
+    assert all(d is None for t, d in zip(range(1, 20), draws) if t > 5)
+    assert FaultPlan.parse("on") == FaultPlan()
+    with pytest.raises(ValueError):
+        FaultPlan.parse("crash=2.0")
+    with pytest.raises(ValueError):
+        FaultPlan.parse("bogus=1")
+
+
+@pytest.mark.parametrize("tick_impl", ["reference", "batched"])
+def test_crash_isolated_and_requeued_with_backoff(universe, tick_impl):
+    """One crashing owner never aborts the tick: the other entries land,
+    the host restores bit-identically, and the handshake re-queues with
+    exponential backoff."""
+    plan = FaultPlan(table={(1, "A"): Fault("crash")})
+    fed = _mini_fed(universe, tick_faults=FaultInjector(plan), backoff_ticks=2)
+    fed.initial_training()
+    snap = {k: np.asarray(v) for k, v in fed.best_snapshot["A"].items()}
+    fed.run(max_ticks=1, tick_impl=tick_impl)
+    evs = [e for e in fed.events if e.tick == 1]
+    crashed = [e for e in evs if e.fault == "crash"]
+    assert len(crashed) == 1 and crashed[0].host == "A"
+    assert not crashed[0].accepted
+    assert [e for e in evs if e.fault is None], "other entries must complete"
+    for k, v in snap.items():
+        np.testing.assert_array_equal(
+            np.asarray(fed.trainers["A"].params[k]), v,
+            err_msg=f"{tick_impl}: A.{k} not restored after crash",
+        )
+    client = crashed[0].client
+    assert fed._retries[("A", client)] == 1
+    assert fed._deferred == [(3, "A", client)]  # 1 + backoff 2 * 2**0
+    assert fed.state["A"] is NodeState.READY
+
+
+def test_exponential_backoff_quarantine_entry_and_release(universe):
+    fed = _mini_fed(universe, backoff_ticks=1, retry_budget=3,
+                    quarantine_ticks=2)
+    fed.initial_training()
+    fed._tick = 10
+    for _ in range(3):
+        fed._entry_failed("A", "B", "crash")
+    assert fed._retries[("A", "B")] == 3
+    # releases 10+1, 10+2, 10+4: exponential in the attempt count
+    assert [r for r, _, _ in fed._deferred] == [11, 12, 14]
+    # third attributed failure hits retry_budget → the host is quarantined
+    assert fed.state["A"] is NodeState.QUARANTINED
+    assert fed._quarantine_until["A"] == 12
+    # quarantined owners plan no entries, and offers FROM them are deferred
+    fed._tick = 11
+    entries = fed.plan_tick()
+    assert all(e.host != "A" for e in entries)
+    assert {(h, c) for _, h, c in fed._deferred if c == "A"} == {
+        ("B", "A"), ("C", "A"),
+    }
+    # timed release back to READY
+    fed._tick = 12
+    fed.plan_tick()
+    assert fed.state["A"] is NodeState.READY
+    assert "A" not in fed._quarantine_until
+
+
+@pytest.mark.parametrize("tick_impl", ["reference", "batched"])
+def test_corrupt_embeddings_rejected_and_client_blamed(universe, tick_impl):
+    """NaN rows in the client's exchanged embeddings are caught by the
+    receiver-side screen, the handshake rejects through the backtrack
+    restore, and the SENDER accrues the blame."""
+    plan = FaultPlan(
+        table={(1, "A"): Fault("corrupt", rows=10_000, mode="nan")}
+    )
+    fed = _mini_fed(universe, tick_faults=FaultInjector(plan),
+                    retry_budget=1, quarantine_ticks=3)
+    fed.initial_training()
+    snap = {k: np.asarray(v) for k, v in fed.best_snapshot["A"].items()}
+    fed.run(max_ticks=1, tick_impl=tick_impl)
+    evs = [e for e in fed.events if e.fault == "corrupt"]
+    assert len(evs) == 1 and evs[0].host == "A"
+    for k, v in snap.items():
+        np.testing.assert_array_equal(
+            np.asarray(fed.trainers["A"].params[k]), v,
+            err_msg=f"{tick_impl}: receiver damaged by corrupt handshake",
+        )
+    # retry_budget=1: the blamed sender goes straight to quarantine — and
+    # stays quarantined even though its own tick entry completed after the
+    # blame was assigned (mid-tick quarantine survives entry completion)
+    assert fed.state[evs[0].client] is NodeState.QUARANTINED
+
+
+@pytest.mark.parametrize("tick_impl", ["reference", "batched"])
+def test_straggler_past_deadline_deferred(universe, tick_impl):
+    plan = FaultPlan(table={(1, "A"): Fault("straggle", delay=1e6)})
+    fed = _mini_fed(universe, tick_faults=FaultInjector(plan),
+                    tick_deadline=1e5)
+    fed.initial_training()
+    fed.run(max_ticks=1, tick_impl=tick_impl)
+    evs = [e for e in fed.events if e.fault == "straggle"]
+    assert len(evs) == 1 and evs[0].host == "A"
+    assert not evs[0].accepted, "late results must be discarded"
+    assert evs[0].seconds > 1e5  # simulated delay counted in wall-clock
+    assert ("A", evs[0].client) in fed._retries  # deferred for retry
+    # entries under the deadline were untouched by the straggler
+    assert [e for e in fed.events if e.tick == 1 and e.fault is None]
+
+
+def test_drop_blames_nobody(universe):
+    plan = FaultPlan(table={(1, "A"): Fault("drop")})
+    fed = _mini_fed(universe, tick_faults=FaultInjector(plan))
+    fed.initial_training()
+    fed.run(max_ticks=1, tick_impl="reference")
+    evs = [e for e in fed.events if e.fault == "drop"]
+    assert len(evs) == 1
+    assert not fed._peer_failures, "a lost message is the network's fault"
+    assert ("A", evs[0].client) in fed._retries  # the pair still retries
+
+
+def test_fault_injection_engine_parity(universe):
+    """Both tick engines honor the same seeded plan identically: same fault
+    draws at the same entries, same surviving decisions/scores/ε, and
+    bit-identical embeddings — failed entries skip the same key-stream
+    positions under either engine."""
+    spec = "crash=0.2,straggle=0.1,corrupt=0.1,seed=7,until=3,delay=1e6"
+
+    def run_with(impl):
+        fed = _mini_fed(universe, tick_faults=spec, tick_deadline=1e5)
+        fed.initial_training()
+        fed.run(max_ticks=4, tick_impl=impl)
+        return fed
+
+    fa, fb = run_with("reference"), run_with("batched")
+    assert any(e.fault for e in fa.events), "seeded storm must fire"
+    assert sorted(map(_event_key, fa.events)) == sorted(map(_event_key, fb.events))
+    assert fa.epsilons == fb.epsilons
+    assert fa.accountant.epsilon() == fb.accountant.epsilon()
+    for n in universe:
+        for k in fa.trainers[n].params:
+            np.testing.assert_array_equal(
+                np.asarray(fa.trainers[n].params[k]),
+                np.asarray(fb.trainers[n].params[k]),
+                err_msg=f"{n}.{k} diverged between engines under faults",
+            )
+
+
+# --------------------------------------------------- crash-consistent resume
+def test_save_scheduler_guards(universe, tmp_path):
+    from repro.checkpoint import save_scheduler
+
+    fed = FederationScheduler(universe, dim=16, local_epochs=1, seed=0)
+    with pytest.raises(ValueError, match="initial_training"):
+        save_scheduler(str(tmp_path / "x.npz"), fed)
+    fed.best_snapshot = {n: fed.trainers[n].snapshot() for n in universe}
+    fed.state["A"] = NodeState.BUSY
+    with pytest.raises(ValueError, match="mid-tick"):
+        save_scheduler(str(tmp_path / "x.npz"), fed)
+
+
+def test_checkpoint_resume_bit_parity(universe, tmp_path):
+    """A scheduler killed between ticks and resumed from its checkpoint
+    makes bit-identical decisions to the uninterrupted run: same events,
+    same scores, same ε streams, same embeddings."""
+    from repro.checkpoint import restore_scheduler, save_scheduler
+
+    def make():
+        return _mini_fed(universe)
+
+    path = str(tmp_path / "fed.npz")
+    a = make()
+    a.initial_training()
+    a.run(max_ticks=2)
+    cut = a._tick
+    save_scheduler(path, a, metadata={"note": "mid-run"})
+    a.run(max_ticks=2)  # the uninterrupted continuation
+
+    b = make()  # the "new process": fresh scheduler over the same universe
+    meta = restore_scheduler(path, b)
+    assert meta == {"note": "mid-run"}
+    assert b._tick == cut
+    b.run(max_ticks=2)
+
+    tail_a = [e for e in a.events if e.tick > cut]
+    assert tail_a, "continuation must have executed entries"
+    assert list(map(_event_key, tail_a)) == list(map(_event_key, b.events))
+    assert a.epsilons == b.epsilons
+    assert a.accountant.epsilon() == b.accountant.epsilon()
+    assert a.best_score == b.best_score
+    for n in universe:
+        for k in a.trainers[n].params:
+            np.testing.assert_array_equal(
+                np.asarray(a.trainers[n].params[k]),
+                np.asarray(b.trainers[n].params[k]),
+                err_msg=f"{n}.{k} diverged after resume",
+            )
+
+
+def test_resume_repopulates_resident_caches(universe, tmp_path):
+    """Device residency is rebuilt lazily after resume: the restored tables
+    land on the default device and the first post-resume tick repopulates
+    the per-device caches (visible as resident_transfers growth)."""
+    from repro.checkpoint import restore_scheduler, save_scheduler
+
+    a = _mini_fed(universe)
+    a.initial_training()
+    a.run(max_ticks=1)
+    path = str(tmp_path / "fed.npz")
+    save_scheduler(path, a)
+    b = _mini_fed(universe)
+    restore_scheduler(path, b)
+    assert b._tick_engine.resident_transfers == 0
+    b.run(max_ticks=1)
+    assert b._tick_engine.resident_transfers > 0
+
+
+def test_chaos_soak_eight_owners_converges():
+    """Seeded storm over an 8-owner ring: crashes, stragglers, and corrupt
+    peers for the first ticks, then the chaos window closes — the
+    federation must heal (deferred work drains, quarantines release, no
+    BUSY/QUARANTINED leak) and still converge to improved scores."""
+    stats = [(f"O{i}", 6, 50000, 150000) for i in range(8)]
+    aligns = [(f"O{i}", f"O{(i + 1) % 8}", 15000) for i in range(8)]
+    uni = synthesize_universe(
+        seed=3, scale=1 / 1000, kg_stats=stats, alignments=aligns
+    )
+    fed = FederationScheduler(
+        uni, dim=16, ppat_cfg=PPATConfig(steps=3, seed=0),
+        local_epochs=2, update_epochs=1, seed=0,
+        tick_faults=(
+            "crash=0.25,straggle=0.15,corrupt=0.15,seed=11,until=4,delay=1e6"
+        ),
+        tick_deadline=1e5, retry_budget=2, backoff_ticks=1,
+        quarantine_ticks=2,
+    )
+    inits = fed.initial_training()
+    fed.run(max_ticks=30)
+    # the storm actually hit, across multiple kinds, and no tick aborted
+    faults = [e.fault for e in fed.events if e.fault]
+    assert len(set(faults)) >= 2, f"storm too quiet: {faults}"
+    # healed at quiescence: zero leaked transient states, nothing stranded
+    assert all(
+        s in (NodeState.READY, NodeState.SLEEP) for s in fed.state.values()
+    ), {n: s.value for n, s in fed.state.items()}
+    assert not fed._deferred and not fed._quarantine_until
+    assert fed._tick < 30, "soak should quiesce before the tick cap"
+    # converged: backtrack invariant holds and federation still improved
+    assert all(fed.best_score[n] >= inits[n] for n in uni)
+    assert any(e.accepted and e.kind == "ppat" for e in fed.events)
