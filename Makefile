@@ -1,19 +1,26 @@
 PY := PYTHONPATH=src python
 
-.PHONY: tier1 test check-hygiene bench-eval bench-train bench-tick bench \
-	bench-json bench-smoke chaos-smoke
+.PHONY: tier1 test check-hygiene lint bench-eval bench-train bench-tick bench \
+	bench-json bench-smoke chaos-smoke attack-smoke
 
-# CI gate: repo hygiene, the full suite, the engine parity tests explicitly
-# (they are the acceptance bars for the streaming fused-rank eval engine, the
-# device-resident training engine, and the batched federation tick engine),
-# then every bench suite at smoke extents so bench code paths can't rot.
-tier1: check-hygiene
+# CI gate: repo hygiene + lint, the full suite, the engine parity tests
+# explicitly (they are the acceptance bars for the streaming fused-rank eval
+# engine, the device-resident training engine, and the batched federation
+# tick engine), then every bench suite at smoke extents so bench code paths
+# can't rot, the fault soak, and the Byzantine-storm gate.
+tier1: check-hygiene lint
 	$(PY) -m pytest -x -q
 	$(PY) -m pytest -q tests/test_eval_engine.py -k "parity"
 	$(PY) -m pytest -q tests/test_train_engine.py -k "parity or retrace"
 	$(PY) -m pytest -q tests/test_tick_engine.py -k "parity or reused"
 	$(MAKE) bench-smoke
 	$(MAKE) chaos-smoke
+	$(MAKE) attack-smoke
+
+# ruff when available, pyflakes as second choice, stdlib-ast fallback
+# otherwise (this container ships neither) — unused/duplicate imports fail
+lint:
+	python tools/lint.py
 
 # every registered bench suite at tiny extents (N=2 owners, E ≤ 1k,
 # single-digit epochs): exercises the bench code paths — including the
@@ -30,6 +37,15 @@ bench-smoke:
 # tick path (group-failure fallback included) runs under fault injection.
 chaos-smoke:
 	XLA_FLAGS="--xla_force_host_platform_device_count=4" PYTHONPATH=src:. python benchmarks/chaos_smoke.py
+
+# seeded Byzantine poisoning storm over a 4-owner ring, run clean /
+# undefended (both tick engines, bit-parity asserted) / defended (median
+# robust aggregation, then + cosine screen): asserts the storm fires, no
+# tick aborts, undefended quality measurably degrades, the defended runs
+# recover to the adversary-free baseline, and the screen/reputation/
+# quarantine machinery engages.
+attack-smoke:
+	PYTHONPATH=src:. python benchmarks/attack_smoke.py
 
 # fail if generated artifacts (bytecode, pytest caches) are ever tracked
 # again — PR 3 accidentally shipped 12 __pycache__/*.pyc files

@@ -1,0 +1,149 @@
+"""Tier-1 Byzantine gate: seeded targeted-poisoning storm over a 4-owner
+federation, run four ways (``make attack-smoke``):
+
+  * **clean** — no adversary, defenses off: the quality baseline;
+  * **undefended** — norm-evading drift poisoning with defenses off, run
+    under BOTH tick engines: the storm must actually fire, every tampered
+    exchange must be isolated to its entry (no tick aborts), the two
+    engines must agree bit-for-bit (the adversary lives outside the
+    key-stream lockstep), and final quality must measurably degrade
+    relative to clean — poisoned exchanges cost accepted progress even
+    though the backtrack gate stops them from corrupting snapshots;
+  * **defended (median)** — robust aggregation clamps the Byzantine rows
+    against the honest majority's delta distribution: final quality must
+    recover to within tolerance of the adversary-free run;
+  * **defended (median + cosine screen)** — the acceptance screen and
+    continuous reputation must engage: poison verdicts fire, blame decays
+    the attacker's reputation, quarantine trips, and no fault escalates to
+    an ``error`` abort.
+
+All four runs are deterministic (seeded adversary, seeded federation), so
+the asserted margins are exact reproductions, not statistical claims. Like
+``chaos_smoke`` this is a pass/fail gate, NOT a measurement — deliberately
+not registered in ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core.federation import FederationScheduler
+from repro.core.ppat import PPATConfig
+from repro.kge.data import synthesize_universe
+
+#: norm-evading targeted drift: every PPAT exchange tampered, 40% of rows
+#: blended fully onto the attacker's fixed direction, norms capped inside
+#: the transfer guard (evade=0.9)
+ADV_SPEC = "drift=1.0,seed=9,strength=1.0,frac=0.4,evade=0.9"
+MAX_TICKS = 14
+
+
+def _run(adv=None, robust="none", cos=None, impl=None):
+    n = 4
+    stats = [(f"O{i}", 6, 40000, 120000) for i in range(n)]
+    aligns = [(f"O{i}", f"O{(i + 1) % n}", 12000) for i in range(n)]
+    kgs = synthesize_universe(
+        seed=3, scale=1 / 1000, kg_stats=stats, alignments=aligns
+    )
+    fed = FederationScheduler(
+        kgs, dim=16, ppat_cfg=PPATConfig(steps=3, seed=0),
+        local_epochs=2, update_epochs=1, seed=0,
+        tick_adversary=adv, robust_agg=robust, cos_screen=cos,
+    )
+    fed.initial_training()
+    fed.run(max_ticks=MAX_TICKS, tick_impl=impl)
+    return fed
+
+
+def _score(fed) -> float:
+    return sum(fed.best_score.values())
+
+
+def _events_key(fed):
+    return [
+        (e.tick, e.host, e.client, e.kind, e.fault, e.attack, e.accepted)
+        for e in fed.events
+    ]
+
+
+def _params_equal(a, b) -> bool:
+    return all(
+        np.array_equal(
+            np.asarray(a.trainers[n].params[k]),
+            np.asarray(b.trainers[n].params[k]),
+        )
+        for n in a.trainers
+        for k in a.trainers[n].params
+    )
+
+
+def main() -> int:
+    t0 = time.perf_counter()
+    clean = _run()
+    undef = _run(adv=ADV_SPEC, impl="reference")
+    undef_b = _run(adv=ADV_SPEC, impl="batched")
+    med = _run(adv=ADV_SPEC, robust="median")
+    scr = _run(adv=ADV_SPEC, robust="median", cos=0.5)
+    wall = time.perf_counter() - t0
+
+    s_clean, s_undef, s_med, s_scr = map(
+        _score, (clean, undef, med, scr)
+    )
+    attacked_runs = [undef, undef_b, med, scr]
+    attacks = [sum(1 for e in f.events if e.attack) for f in attacked_runs]
+    errors = [
+        e for f in attacked_runs + [clean] for e in f.events
+        if e.fault == "error"
+    ]
+    poisons = sum(1 for e in scr.events if e.fault == "poison")
+
+    checks = [
+        (all(a > 0 for a in attacks),
+         f"storm too quiet — attack counts per run: {attacks}"),
+        (not errors,
+         f"tampered exchanges escalated to tick aborts: {errors}"),
+        (sum(1 for e in clean.events if e.attack) == 0,
+         "clean run recorded attack events"),
+        (_events_key(undef) == _events_key(undef_b),
+         "engine parity broke under adversary: event streams differ"),
+        (_params_equal(undef, undef_b),
+         "engine parity broke under adversary: final params differ"),
+        (s_clean - s_undef >= 0.005,
+         f"undefended run did not degrade: clean={s_clean:.4f} "
+         f"undefended={s_undef:.4f}"),
+        (s_med >= s_clean - 0.004,
+         f"median defense did not recover quality: clean={s_clean:.4f} "
+         f"defended={s_med:.4f}"),
+        (s_scr >= s_clean - 0.01,
+         f"screen+median defense lost too much quality: "
+         f"clean={s_clean:.4f} defended={s_scr:.4f}"),
+        (poisons > 0,
+         "cosine screen never fired under a full-strength storm"),
+        (scr._reputation and min(scr._reputation.values()) < 1.0,
+         f"reputation never decayed despite poison verdicts: "
+         f"{scr._reputation}"),
+        (any(e.accepted and e.kind == "ppat" for e in scr.events),
+         "defended federation made no progress"),
+    ]
+    failures = [msg for ok, msg in checks if not ok]
+    print(
+        f"attack-smoke: wall={wall:.1f}s scores clean={s_clean:.4f} "
+        f"undef={s_undef:.4f} median={s_med:.4f} screen={s_scr:.4f} "
+        f"attacks={attacks} poisons={poisons} "
+        f"rep={ {k: round(v, 3) for k, v in scr._reputation.items()} }"
+    )
+    for msg in failures:
+        print(f"attack-smoke FAIL: {msg}", file=sys.stderr)
+    if failures:
+        return 1
+    print(
+        "attack-smoke: PASS — storm isolated, engines agree, defenses "
+        "recover what the adversary cost"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

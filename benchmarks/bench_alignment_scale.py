@@ -10,7 +10,6 @@ from benchmarks.common import emit, pick, small_universe
 from repro.core.alignment import AlignmentRegistry
 from repro.core.federation import FederationScheduler
 from repro.core.ppat import PPATConfig
-from repro.kge.eval import triple_classification_accuracy
 
 
 def main() -> None:

@@ -74,12 +74,12 @@ def _build_universe(owners: int, entities: int, triples: int, aligned: int):
     )
 
 
-def _make(kgs, args):
+def _make(kgs, args, **defense):
     return FederationScheduler(
         kgs, dim=args.dim, ppat_cfg=PPATConfig(steps=args.ppat_steps, seed=0),
         local_epochs=args.local_epochs, update_epochs=args.update_epochs,
         seed=0, score_metric=args.metric, score_max_test=args.max_test,
-        batch_size=args.batch,
+        batch_size=args.batch, **defense,
     )
 
 
@@ -129,15 +129,30 @@ def main(argv=None) -> None:
     # (scheduler key, tick_impl, tick_placement, tick_faults)
     # "on" arms the fault layer with zero rates + active norm screens — the
     # hooks-armed-but-idle cost; None is the default faults-off fast path.
+    # (scheduler key, tick_impl, tick_placement, tick_faults, parity)
+    # "adversary" times the batched engine under an ACTIVE poisoning storm
+    # with the defense stack armed (robust median aggregation + cosine
+    # screen + reputation gating) — the cost of Byzantine robustness while
+    # actually under attack. It takes different accept decisions than the
+    # clean runs by design, so it is excluded from the parity asserts (the
+    # adversary's own engine-parity contract is pinned by
+    # tests/test_adversary.py and benchmarks/attack_smoke.py).
     runs = [
-        ("reference", "reference", None, None),
-        ("batched", "batched", "single", None),
-        ("sharded", "batched", "sharded", None),
-        ("armed", "batched", "single", "on"),
+        ("reference", "reference", None, None, True),
+        ("batched", "batched", "single", None, True),
+        ("sharded", "batched", "sharded", None, True),
+        ("armed", "batched", "single", "on", True),
+        ("adversary", "batched", "single", None, False),
     ]
     feds = {}
-    for key, _, _, _ in runs:
-        feds[key] = _make(kgs, args)
+    for key, _, _, _, _ in runs:
+        defense = {}
+        if key == "adversary":
+            defense = dict(
+                tick_adversary="drift=0.5,seed=9,strength=1.0,frac=0.4",
+                robust_agg="median", cos_screen=0.5,
+            )
+        feds[key] = _make(kgs, args, **defense)
         feds[key].initial_training()
 
     def _one_tick(key, impl, placement, faults):
@@ -154,28 +169,36 @@ def main(argv=None) -> None:
     # steady state, not a late compile)
     progs, stable = -1, 0
     for w in range(args.warm_ticks):
-        for key, impl, placement, faults in runs:
+        for key, impl, placement, faults, _ in runs:
             _one_tick(key, impl, placement, faults)
-        for key, _, _, _ in runs[1:]:
-            _assert_parity(feds["reference"], feds[key])
+        for key, _, _, _, parity in runs[1:]:
+            if parity:
+                _assert_parity(feds["reference"], feds[key])
         stable = stable + 1 if tick_program_cache_size() == progs else 0
         if stable >= 2:
             break
         progs = tick_program_cache_size()
 
-    timed = {key: 0.0 for key, _, _, _ in runs}
+    timed = {key: 0.0 for key, _, _, _, _ in runs}
     for _ in range(args.ticks):
-        for key, impl, placement, faults in runs:
+        for key, impl, placement, faults, _ in runs:
             t0 = time.perf_counter()
             _one_tick(key, impl, placement, faults)
             timed[key] += time.perf_counter() - t0
-        for key, _, _, _ in runs[1:]:
-            _assert_parity(feds["reference"], feds[key])
+        for key, _, _, _, parity in runs[1:]:
+            if parity:
+                _assert_parity(feds["reference"], feds[key])
 
     us_ref = timed["reference"] * 1e6 / args.ticks
     us_bat = timed["batched"] * 1e6 / args.ticks
     us_sh = timed["sharded"] * 1e6 / args.ticks
     us_armed = timed["armed"] * 1e6 / args.ticks
+    us_adv = timed["adversary"] * 1e6 / args.ticks
+    n_attacks = sum(1 for e in feds["adversary"].events if e.attack)
+    n_poison = sum(
+        1 for e in feds["adversary"].events if e.fault == "poison"
+    )
+    adv_overhead = us_adv / us_bat
     speedup = us_ref / us_bat
     sh_speedup = us_ref / us_sh
     fault_overhead = us_armed / us_bat
@@ -223,6 +246,17 @@ def main(argv=None) -> None:
         (f"tick_engine.fault_overhead.N{args.owners}.E{args.entities}",
          fault_overhead,
          f"armed/off ratio={fault_overhead:.2f}x parity=bitwise;{env['batched']}"),
+        # Byzantine-robustness cost while under ACTIVE attack: batched tick
+        # with a drift storm firing and the full defense stack engaged
+        # (median robust aggregation + cosine screen + reputation). Attack
+        # and poison counts ride in the derived column so a quiesced-early
+        # or storm-dead run is visible in the artifact, not silent.
+        (f"tick_engine.adversary.N{args.owners}.E{args.entities}", us_adv,
+         f"batched tick, drift storm + median/screen defenses; "
+         f"attacks={n_attacks} poisons={n_poison};{env['batched']}"),
+        (f"tick_engine.adversary_overhead.N{args.owners}.E{args.entities}",
+         adv_overhead,
+         f"defended-under-attack/off ratio={adv_overhead:.2f}x;{env['batched']}"),
     ]
     for name, us, derived in rows:
         emit(name, us, derived)

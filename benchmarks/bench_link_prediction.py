@@ -4,7 +4,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks.common import emit, pick, small_universe
 from repro.core.federation import FederationScheduler

@@ -22,6 +22,7 @@ import time
 import traceback
 
 from benchmarks import (
+    attack_eval,
     bench_aggregation,
     bench_alignment_scale,
     bench_eval_engine,
@@ -50,6 +51,7 @@ SUITES = [
     ("noise_ablation", bench_noise_ablation.main),                # Tab. 5
     ("alignment_scale", bench_alignment_scale.main),              # Tab. 6
     ("aggregation", bench_aggregation.main),                      # Tab. 7
+    ("attack_eval", attack_eval.main),           # measured leakage vs ε
 ]
 
 

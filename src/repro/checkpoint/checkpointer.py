@@ -81,7 +81,12 @@ def _scheduler_tree(sched) -> Dict:
     """The scheduler's array-valued state. One embedding copy per owner: at
     a tick boundary ``trainer.params`` and ``best_snapshot`` are the same
     arrays by construction (accept aliases snapshot=params, reject restores
-    params=snapshot), so the accepted snapshot is the canonical table."""
+    params=snapshot), so the accepted snapshot is the canonical table.
+
+    ``adversary`` carries the replay-attack stale-view cache (the only
+    adversary state that feeds back into behavior) — empty when no
+    adversary is armed, so pre-adversary checkpoints stay byte-compatible."""
+    adv = sched._adversary
     return {
         "key": sched._key,
         "trainers": {
@@ -91,6 +96,7 @@ def _scheduler_tree(sched) -> Dict:
             }
             for n in sched.trainers
         },
+        "adversary": adv.stale_arrays() if adv is not None else {},
     }
 
 
@@ -124,6 +130,14 @@ def save_scheduler(path: str, sched, *, metadata: Optional[Dict] = None) -> None
         "peer_failures": dict(sched._peer_failures),
         "deferred": [[r, h, c] for r, h, c in sched._deferred],
         "quarantine_until": dict(sched._quarantine_until),
+        "reputation": {n: float(v) for n, v in sched._reputation.items()},
+        "adversary_stale": {
+            key: {leaf: list(a.shape) for leaf, a in leaves.items()}
+            for key, leaves in (
+                sched._adversary.stale_arrays() if sched._adversary is not None
+                else {}
+            ).items()
+        },
         "placement": sched._tick_engine.placement.assignments(),
         "rng": {
             n: tr.rng.bit_generator.state for n, tr in sched.trainers.items()
@@ -151,6 +165,19 @@ def restore_scheduler(path: str, sched) -> Dict:
             for n, tr in sched.trainers.items()
         },
     }
+    # peek the sidecar first: the stale-view subtree's shapes are data-
+    # dependent (old checkpoints predate the key entirely)
+    with np.load(path, allow_pickle=False) as z:
+        sd0 = json.loads(str(z["__metadata__"])).get("scheduler", {})
+    stale_shapes = sd0.get("adversary_stale", {})
+    if stale_shapes:
+        like["adversary"] = {
+            key: {
+                leaf: jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+                for leaf, shape in leaves.items()
+            }
+            for key, leaves in stale_shapes.items()
+        }
     tree, meta = load_checkpoint(path, like)
     sd = meta.get("scheduler")
     if sd is None:
@@ -182,5 +209,19 @@ def restore_scheduler(path: str, sched) -> Dict:
     sched._quarantine_until = {
         k: int(v) for k, v in sd["quarantine_until"].items()
     }
+    # continuous reputation (absent in pre-defense checkpoints → pristine)
+    sched._reputation = {
+        k: float(v) for k, v in sd.get("reputation", {}).items()
+    }
+    # replay-attack stale-view cache: resumed storms must re-ship the SAME
+    # stale views the interrupted run cached
+    if stale_shapes:
+        adv = sched._adversary_for(None)
+        if adv is None:
+            raise ValueError(
+                "checkpoint carries adversary replay state but no "
+                "tick_adversary is configured on the restoring scheduler"
+            )
+        adv.load_stale(tree["adversary"])
     sched._tick_engine.placement.restore_assignments(sd["placement"])
     return {k: v for k, v in meta.items() if k != "scheduler"}

@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
-from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
+from repro.configs.base import ModelConfig
 
 from repro.configs.qwen3_0_6b import CONFIG as QWEN3_0_6B
 from repro.configs.whisper_medium import CONFIG as WHISPER_MEDIUM

@@ -11,11 +11,104 @@ Two pieces (§3.2.1 last paragraph + §4.3 Tab. 7):
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+
+#: robust-acceptance modes applied to the synthesized aligned rows BEFORE
+#: KGEmb aggregation (``FederationScheduler(robust_agg=...)``)
+ROBUST_AGG_MODES = ("none", "clip", "median", "trimmed")
+
+
+def _masked_median(v: jnp.ndarray, mask: jnp.ndarray, n: jnp.ndarray):
+    """Median over the first ``n`` rows of ``v`` (axis 0), robust to padded
+    tails: masked-out rows sort to +inf past the true rows, and the median
+    indices are computed from the traced true count."""
+    big = jnp.where(mask, v, jnp.inf)
+    s = jnp.sort(big, axis=0)
+    lo = jnp.take(s, (n - 1) // 2, axis=0)
+    hi = jnp.take(s, n // 2, axis=0)
+    return 0.5 * (lo + hi)
+
+
+def robust_rows_graph(
+    cur: jnp.ndarray,
+    synth: jnp.ndarray,
+    n: jnp.ndarray,
+    *,
+    mode: str,
+    want_cos: bool,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Robust acceptance over the synthesized aligned-entity rows, as a pure
+    graph both tick engines trace on identically padded shapes (rows past
+    ``n`` pass through untouched — the bit-parity contract holds per bucket).
+
+    Statistics are over the per-row *deltas* (synth − current): a Byzantine
+    minority of rows crafted under the norm screen still stands out against
+    the honest majority's delta distribution.
+
+      * ``clip``    — per-row delta-norm clipping at 2× the median norm;
+      * ``median``  — coordinate-wise clamp to median ± 3·MAD;
+      * ``trimmed`` — coordinate-wise clamp to 20%-trimmed mean ± 3× the
+                      trimmed absolute deviation;
+      * ``none``    — identity (callers skip the call entirely on the
+                      defenses-off path, keeping it bit-identical).
+
+    ``want_cos`` additionally returns the mean per-row cosine between the
+    host's current rows and the RAW (pre-robustization) synthesized rows —
+    the cosine-shift screen the scheduler's accept gate thresholds.
+    """
+    nrows = synth.shape[0]
+    mask = jnp.arange(nrows) < n
+    nf = jnp.maximum(n, 1)
+    mean_cos = jnp.float32(1.0)
+    if want_cos:
+        num = jnp.sum(cur * synth, axis=1)
+        den = (
+            jnp.linalg.norm(cur, axis=1) * jnp.linalg.norm(synth, axis=1)
+            + 1e-12
+        )
+        mean_cos = jnp.sum(jnp.where(mask, num / den, 0.0)) / nf
+    if mode == "none":
+        return synth, mean_cos
+    colmask = mask[:, None]
+    delta = synth - cur
+    if mode == "clip":
+        dn = jnp.linalg.norm(delta, axis=1)
+        med = _masked_median(dn, mask, nf)
+        cap = 2.0 * med + 1e-6
+        robust = delta * jnp.minimum(1.0, cap / jnp.maximum(dn, 1e-12))[:, None]
+    elif mode == "median":
+        med = _masked_median(delta, colmask, nf)
+        mad = _masked_median(jnp.abs(delta - med), colmask, nf)
+        robust = jnp.clip(delta, med - 3.0 * mad - 1e-6, med + 3.0 * mad + 1e-6)
+    elif mode == "trimmed":
+        k = nf // 5  # 20% trimmed each side
+        s = jnp.sort(jnp.where(colmask, delta, jnp.inf), axis=0)
+        r = jnp.arange(nrows)[:, None]
+        keep = (r >= k) & (r < nf - k)
+        cnt = jnp.maximum(nf - 2 * k, 1)
+        center = jnp.sum(jnp.where(keep, s, 0.0), axis=0) / cnt
+        spread = (
+            jnp.sum(jnp.where(keep, jnp.abs(s - center), 0.0), axis=0) / cnt
+        )
+        robust = jnp.clip(
+            delta, center - 3.0 * spread - 1e-6, center + 3.0 * spread + 1e-6
+        )
+    else:
+        raise ValueError(f"unknown robust_agg mode {mode!r}")
+    return jnp.where(colmask, cur + robust, synth), mean_cos
+
+
+#: jitted entry point for the serial reference path (the batched engine
+#: inlines ``robust_rows_graph`` into its entry programs)
+robust_rows = functools.partial(
+    jax.jit, static_argnames=("mode", "want_cos")
+)(robust_rows_graph)
 
 
 def kgemb_update(

@@ -20,7 +20,6 @@ Also provides a sharded KGE train step: the entity table is sharded over the
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax

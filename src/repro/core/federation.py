@@ -37,19 +37,28 @@ from __future__ import annotations
 import enum
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import kgemb_update, virtual_extension
+from repro.core.aggregation import (
+    ROBUST_AGG_MODES,
+    kgemb_update,
+    robust_rows,
+    virtual_extension,
+)
 from repro.core.alignment import AlignmentRegistry
+from repro.core.faults import screen_rows
 from repro.core.ppat import PPATConfig, train_ppat
 from repro.core.privacy import MomentsAccountant
-from repro.kernels.dispatch import resolve_tick_faults, resolve_tick_impl
-from repro.kge.eval import triple_classification_accuracy
+from repro.kernels.dispatch import (
+    resolve_tick_adversary,
+    resolve_tick_faults,
+    resolve_tick_impl,
+)
 from repro.kge.trainer import KGETrainer
 
 
@@ -81,8 +90,12 @@ class FederationEvent:
     epsilon: float = float("nan")
     seconds: float = 0.0
     #: non-None when this entry failed: "crash" | "straggle" | "drop" |
-    #: "corrupt" | "error" (an uninjected exception isolated by the tick)
+    #: "corrupt" | "poison" (cosine-shift screen rejected the exchange) |
+    #: "error" (an uninjected exception isolated by the tick)
     fault: Optional[str] = None
+    #: audit trail: the injected adversarial attack kind ("drift" | "sybil"
+    #: | "replay"), if an adversary tampered with this entry's client view
+    attack: Optional[str] = None
 
 
 @dataclass
@@ -122,8 +135,6 @@ class _ClientView:
 
     def _ship(self, rows: jnp.ndarray) -> jnp.ndarray:
         if self.screen is not None:
-            from repro.core.faults import screen_rows
-
             screen_rows(rows, bound=self.screen, host=self._who[0],
                         client=self._who[1], what="client embeddings")
         return rows if self.device is None else jax.device_put(rows, self.device)
@@ -160,6 +171,11 @@ class FederationScheduler:
         tick_placement: Optional[str] = None,
         tick_residency: Optional[str] = None,
         tick_faults=None,
+        tick_adversary=None,
+        robust_agg: str = "none",
+        cos_screen: Optional[float] = None,
+        rep_decay: float = 0.5,
+        rep_recover: float = 0.25,
         retry_budget: int = 3,
         backoff_ticks: int = 1,
         quarantine_ticks: int = 4,
@@ -189,6 +205,28 @@ class FederationScheduler:
         # core.faults.FaultPlan, or a FaultInjector; resolution happens per
         # run() so an env change between runs takes effect.
         self.tick_faults = tick_faults
+        # adversarial-peer layer (None/off ⇒ bit-identical pre-attack fast
+        # path). ``tick_adversary`` is a REPRO_TICK_ADVERSARY-style spec
+        # string, a core.adversary.AdversaryPlan, or an Adversary; resolved
+        # per run() like ``tick_faults``.
+        self.tick_adversary = tick_adversary
+        # ---- robust acceptance (the Byzantine defenses; all off by
+        # default — the defenses-off path is bit-identical) ----------------
+        if robust_agg not in ROBUST_AGG_MODES:
+            raise ValueError(
+                f"unknown robust_agg mode {robust_agg!r} "
+                f"(one of {'|'.join(ROBUST_AGG_MODES)})"
+            )
+        #: robust aggregation over synthesized aligned rows before KGEmb
+        self.robust_agg = robust_agg
+        if cos_screen is not None and not -1.0 <= cos_screen <= 1.0:
+            raise ValueError(f"cos_screen={cos_screen} outside [-1, 1]")
+        #: cosine-shift accept gate: a handshake whose mean cosine between
+        #: the host's current rows and the synthesized rows falls below the
+        #: (reputation-sharpened) threshold is rejected as "poison"
+        self.cos_screen = cos_screen
+        self.rep_decay = rep_decay      # reputation *= decay on blame
+        self.rep_recover = rep_recover  # reputation += recover on accept
         self.retry_budget = retry_budget          # attributed failures → quarantine
         self.backoff_ticks = backoff_ticks        # base of the exponential backoff
         self.quarantine_ticks = quarantine_ticks  # timed release horizon
@@ -245,8 +283,17 @@ class FederationScheduler:
         self._deferred: List[tuple] = []
         #: quarantined peer → release tick
         self._quarantine_until: Dict[str, int] = {}
+        #: continuous reputation per peer (absent = pristine 1.0): decays
+        #: multiplicatively on every attributed blame, recovers additively
+        #: on accepted handshakes. With defenses armed it gates handshake
+        #: priority (``_next_offer``) and sharpens the cosine screen
+        #: (``_cos_tau``); kept sparse so the defenses-off path carries no
+        #: state. Serialized by save_scheduler/restore_scheduler.
+        self._reputation: Dict[str, float] = {}
         self._injector = None          # cached resolved FaultInjector
         self._injector_src = None
+        self._adversary = None         # cached resolved Adversary
+        self._adversary_src = None
         self._tick = 0
         self._key = jax.random.PRNGKey(seed + 101)
         # backtrack-scoring inputs are built from the immutable kg splits —
@@ -404,6 +451,7 @@ class FederationScheduler:
         *,
         client_view: Optional[Dict[str, jnp.ndarray]] = None,
         fault=None,
+        attack=None,
         screen: Optional[float] = None,
         deadline: Optional[float] = None,
     ) -> FederationEvent:
@@ -421,6 +469,12 @@ class FederationScheduler:
         gathers, and ``deadline`` marks entries whose wall-clock exceeds it
         as stragglers — their result is discarded via the normal backtrack
         restore and the event carries ``fault="straggle"``.
+
+        ``attack`` is the adversary layer's audit annotation: the caller
+        already tampered ``client_view`` per the drawn attack; the event
+        records its kind. The Byzantine defenses (``robust_agg`` /
+        ``cos_screen``) run here regardless of whether an attack fired —
+        honest exchanges must survive them.
         """
         # perf_counter: event timings must be monotonic (time.time() jumps
         # with NTP/clock adjustments)
@@ -485,6 +539,18 @@ class FederationScheduler:
             refine = procrustes(synth, _pad_rows(y, PPAT_BUCKET))
             synth = synth @ refine
         n_ent = len(idx_c)
+        # ---- robust acceptance (Byzantine defenses; "none"+None skips the
+        # call entirely — the defenses-off path stays bit-identical). Runs
+        # on the SAME padded shapes the batched engine traces, over the
+        # entity rows only (relation glue rows pass through untouched).
+        mean_cos: Optional[float] = None
+        if self.robust_agg != "none" or self.cos_screen is not None:
+            synth, mc = robust_rows(
+                _pad_rows(y, PPAT_BUCKET), synth, jnp.int32(n_ent),
+                mode=self.robust_agg, want_cos=self.cos_screen is not None,
+            )
+            if self.cos_screen is not None:
+                mean_cos = float(mc)
         kgemb_update(hos_tr, idx_h, synth[:n_ent], mode=self.aggregation)
         if rel is not None and len(rel[0]):
             cur = hos_tr.get_relation_embeddings(rel[1])
@@ -519,7 +585,15 @@ class FederationScheduler:
         if fault is not None and fault.kind == "straggle":
             elapsed += fault.delay
         straggled = deadline is not None and elapsed > deadline
-        accepted = after > before and not straggled
+        # cosine-shift accept gate: a synthesized release pointing away from
+        # the host's own rows is rejected as poison even if the backtrack
+        # score would have admitted it. The threshold sharpens as the
+        # client's reputation decays (``_cos_tau``).
+        poisoned = (
+            mean_cos is not None and not straggled
+            and mean_cos < self._cos_tau(client)
+        )
+        accepted = after > before and not straggled and not poisoned
         if accepted:  # Backtrack (Alg. 1 l. 17)
             self.best_score[host] = after
             self.best_snapshot[host] = hos_tr.snapshot()
@@ -529,15 +603,19 @@ class FederationScheduler:
             # conditional: a mid-tick quarantine (this host blamed as the
             # client of another entry) must survive its own entry completing
             self.state[host] = NodeState.READY
+        fault_kind = (
+            "straggle" if straggled else ("poison" if poisoned else None)
+        )
         ev = FederationEvent(
             self._tick, host, client, "ppat", before, after, accepted,
-            epsilon=hist["epsilon"], seconds=elapsed,
-            fault="straggle" if straggled else None,
+            epsilon=hist["epsilon"], seconds=elapsed, fault=fault_kind,
+            attack=attack.kind if attack is not None else None,
         )
         self.events.append(ev)
         if accepted:
             self.broadcast(host)
-        if not straggled:
+            self._rep_recover(host, client)
+        if fault_kind is None:
             self._note_entry_ok(host, client)
         return ev
 
@@ -600,8 +678,10 @@ class FederationScheduler:
         """Isolate one failed tick entry: restore the host to its best
         snapshot, emit the fault event, re-queue the handshake with
         exponential backoff, and attribute blame toward quarantine
-        (crash/straggle/error → host, corrupt → the sending client,
-        drop → the network, i.e. nobody)."""
+        (crash/straggle/error → host, corrupt/poison → the sending client,
+        drop → the network, i.e. nobody). Blame also decays the peer's
+        continuous reputation — state that only *gates* decisions while the
+        Byzantine defenses are armed (``_defended``)."""
         snap = self.best_snapshot.get(host)
         if snap is not None:
             self.trainers[host].restore(snap)
@@ -619,12 +699,49 @@ class FederationScheduler:
             self._retries[(host, client)] = att
             release = self._tick + self.backoff_ticks * (2 ** min(att - 1, 6))
             self._deferred.append((release, host, client))
-        peer = {"corrupt": client, "drop": None}.get(fault_kind, host)
+        peer = {"corrupt": client, "poison": client, "drop": None}.get(
+            fault_kind, host
+        )
         if peer is not None:
+            self._reputation[peer] = (
+                self._reputation.get(peer, 1.0) * self.rep_decay
+            )
             n = self._peer_failures.get(peer, 0) + 1
             self._peer_failures[peer] = n
             if n >= self.retry_budget:
                 self._quarantine(peer)
+
+    def _rep_recover(self, *peers: str) -> None:
+        """Accepted handshakes additively repair both participants'
+        reputation; entries reaching pristine 1.0 are dropped so the map
+        stays sparse (absent = 1.0) and the defenses-off path carries no
+        state."""
+        for p in peers:
+            r = self._reputation.get(p)
+            if r is None:
+                continue
+            r += self.rep_recover
+            if r >= 1.0:
+                del self._reputation[p]
+            else:
+                self._reputation[p] = r
+
+    @property
+    def _defended(self) -> bool:
+        """Whether the Byzantine defenses are armed — reputation state only
+        influences scheduling/screen decisions when this holds, so fault-only
+        runs stay bit-identical to the pre-defense engine."""
+        return self.robust_agg != "none" or self.cos_screen is not None
+
+    def _cos_tau(self, client: str) -> float:
+        """Effective cosine-shift threshold for this client: the configured
+        ``cos_screen`` sharpened toward 1.0 as the client's reputation
+        decays — a peer caught misbehaving must look *more* consistent to
+        get a handshake accepted."""
+        if self.cos_screen is None:
+            return -1.0
+        rep = self._reputation.get(client, 1.0)
+        return 1.0 - rep * (1.0 - self.cos_screen)
 
     def _quarantine(self, peer: str) -> None:
         """Expel a repeatedly-failing peer from the mesh for
@@ -660,7 +777,29 @@ class FederationScheduler:
         """Front-of-queue client for this owner, skipping quarantined
         clients — their offers are deferred until the quarantine release,
         not dropped. Identical to a plain pop while no peer is quarantined
-        (the faults-off bit-parity path)."""
+        (the faults-off bit-parity path).
+
+        With the Byzantine defenses armed AND any reputation below pristine,
+        the pop becomes reputation-priority: the highest-reputation queued
+        offer is served first (FIFO among ties), so suspected poisoners wait
+        behind peers in good standing. The gate on ``_defended`` keeps every
+        existing fault-storm trace byte-identical — reputation state may
+        accumulate, but it changes no decision until defenses are on."""
+        if self._defended and self._reputation and self.queue[name]:
+            best = max(
+                self._reputation.get(c, 1.0) for c in self.queue[name]
+            )
+            for client in self.queue[name]:
+                if self._reputation.get(client, 1.0) == best:
+                    self.queue[name].remove(client)
+                    self._queued[name].discard(client)
+                    if self.state.get(client) is NodeState.QUARANTINED:
+                        release = self._quarantine_until.get(
+                            client, self._tick + 1
+                        )
+                        self._deferred.append((release, name, client))
+                        return self._next_offer(name)
+                    return client
         while self.queue[name]:
             client = self._pop_offer(name)
             if self.state.get(client) is NodeState.QUARANTINED:
@@ -707,6 +846,48 @@ class FederationScheduler:
         self._injector_src = src
         return self._injector
 
+    def _adversary_for(self, tick_adversary=None):
+        """Resolve the adversarial-peer layer (call-site arg > constructor >
+        env) to a cached ``core.adversary.Adversary``, or ``None`` when off —
+        the default, in which case every hook downstream is an ``is None``
+        check. The cache matters beyond speed: the Adversary carries the
+        replay-attack stale-view cache, which must persist across run()
+        calls (and checkpoint restore rebinds it here)."""
+        src = resolve_tick_adversary(
+            tick_adversary if tick_adversary is not None
+            else self.tick_adversary
+        )
+        if src is None:
+            self._adversary = self._adversary_src = None
+            return None
+        from repro.core.adversary import Adversary, resolve_adversary
+
+        if isinstance(src, Adversary):
+            self._adversary = self._adversary_src = src
+            return src
+        if self._adversary is not None and self._adversary_src == src:
+            return self._adversary
+        self._adversary = resolve_adversary(src)
+        self._adversary_src = src
+        return self._adversary
+
+    def screen_incoming(
+        self, host: str, client: str, view: Dict, *, bound: float
+    ) -> None:
+        """The shared receiver-side acceptance screen both tick engines run
+        on an incoming client view BEFORE any PPAT key is consumed: every
+        row the host will read (aligned set + virtual neighbors) must be
+        finite and inside the norm bound, else ``CorruptEmbeddingError``
+        routes the entry through the failure path with the client blamed.
+        One call site per engine — screen-policy changes cannot diverge
+        between the reference and batched paths."""
+        pair = self._tick_engine._pair_info(client, host)
+        screen_rows(
+            np.asarray(view["ent"])[pair["screen_idx"]],
+            bound=bound, host=host, client=client,
+            what="client embeddings",
+        )
+
     # -------------------------------------------------------------- loop
     def plan_tick(self, *, self_train: bool = True) -> List[TickEntry]:
         """Snapshot this tick's work from the current protocol state: every
@@ -745,16 +926,19 @@ class FederationScheduler:
         tick_placement: Optional[str] = None,
         tick_residency: Optional[str] = None,
         tick_faults=None,
+        tick_adversary=None,
     ) -> Dict[str, float]:
         """Scheduler ticks until quiescence (all queues empty, no improvement,
         nothing deferred or quarantined) or ``max_ticks``. Each tick serves
         every Ready owner once, per the tick-start plan. ``tick_impl``
         ("batched" | "reference"), ``tick_placement``
         ("auto" | "single" | "sharded"), ``tick_residency``
-        ("auto" | "resident" | "normalize") and ``tick_faults`` (a
+        ("auto" | "resident" | "normalize"), ``tick_faults`` (a
         ``REPRO_TICK_FAULTS``-style spec / ``FaultPlan`` / ``FaultInjector``)
-        override the constructor/env-resolved engine, device placement,
-        output residency, and fault layer for this run.
+        and ``tick_adversary`` (a ``REPRO_TICK_ADVERSARY``-style spec /
+        ``AdversaryPlan`` / ``Adversary``) override the constructor/
+        env-resolved engine, device placement, output residency, fault layer,
+        and adversarial-peer layer for this run.
 
         Failure semantics: one failing entry never aborts its tick — it is
         isolated, its host restored from the best snapshot, and the
@@ -766,6 +950,7 @@ class FederationScheduler:
             tick_impl if tick_impl is not None else self.tick_impl
         )
         injector = self._fault_injector(tick_faults)
+        adversary = self._adversary_for(tick_adversary)
         deadline = self.tick_deadline
         if impl == "batched":
             # validate BEFORE any plan pops offers: the host-loop dense
@@ -788,7 +973,7 @@ class FederationScheduler:
                     events = self._tick_engine.execute(
                         plan, self._tick, placement=tick_placement,
                         residency=tick_residency, faults=injector,
-                        deadline=deadline,
+                        adversary=adversary, deadline=deadline,
                     )
                 except Exception:
                     done = {
@@ -797,7 +982,7 @@ class FederationScheduler:
                     self._unwind_plan(plan, done)
                     raise
             else:
-                events = self._run_serial(plan, injector, deadline)
+                events = self._run_serial(plan, injector, adversary, deadline)
             any_progress = any(ev.accepted for ev in events)
             if (
                 not any_progress
@@ -809,10 +994,14 @@ class FederationScheduler:
         return dict(self.best_score)
 
     def _run_serial(
-        self, plan: List[TickEntry], injector, deadline: Optional[float]
+        self, plan: List[TickEntry], injector, adversary,
+        deadline: Optional[float],
     ) -> List[FederationEvent]:
         """Reference-engine tick execution with per-entry fault isolation.
-        With ``injector=None`` this is exactly the pre-fault serial loop."""
+        With ``injector=None`` and ``adversary=None`` this is exactly the
+        pre-fault serial loop. Tamper order is fixed and identical in both
+        engines: client view → adversary tamper → fault corruption →
+        receiver screens — all before any PPAT key is consumed."""
         from repro.core.faults import FaultError
 
         events: List[FederationEvent] = []
@@ -823,7 +1012,17 @@ class FederationScheduler:
                 injector.draw(self._tick, e.host, e.client)
                 if injector is not None else None
             )
+            attack = (
+                adversary.draw(self._tick, e.host, e.client)
+                if adversary is not None and e.kind == "ppat" else None
+            )
             view = e.client_view
+            if attack is not None:
+                pair = self._tick_engine._pair_info(e.client, e.host)
+                view = adversary.tamper_view(
+                    view, attack, self._tick, e.host, e.client,
+                    rows=pair["screen_idx"],
+                )
             if (
                 fault is not None and fault.kind == "corrupt"
                 and e.kind == "ppat"
@@ -837,17 +1036,12 @@ class FederationScheduler:
                         # happens BEFORE any key is consumed, keeping the
                         # serial and batched key streams in lockstep (the
                         # per-gather screens below stay as defense in depth)
-                        from repro.core.faults import screen_rows
-
-                        pair = self._tick_engine._pair_info(e.client, e.host)
-                        screen_rows(
-                            np.asarray(view["ent"])[pair["screen_idx"]],
-                            bound=screen, host=e.host, client=e.client,
-                            what="client embeddings",
+                        self.screen_incoming(
+                            e.host, e.client, view, bound=screen
                         )
                     ev = self.federate_once(
                         e.host, e.client, client_view=view, fault=fault,
-                        screen=screen, deadline=deadline,
+                        attack=attack, screen=screen, deadline=deadline,
                     )
                 else:
                     ev = self.self_train_once(
@@ -868,4 +1062,6 @@ class FederationScheduler:
             events.append(ev)
             if ev.fault == "straggle":
                 self._entry_failed(e.host, e.client, "straggle", emit=False)
+            elif ev.fault == "poison":
+                self._entry_failed(e.host, e.client, "poison", emit=False)
         return events

@@ -379,3 +379,30 @@ def train_ppat(
     history["epsilon"] = host.accountant.epsilon()
     history["max_alpha"] = host.accountant.max_alpha()
     return client, host, history
+
+
+def noisy_vote_labels(
+    host_params: dict,
+    rows: jnp.ndarray,
+    lam: float,
+    key: jax.Array,
+    *,
+    rounds: int = 1,
+) -> np.ndarray:
+    """The PATE vote channel as an attacker-facing query surface.
+
+    Everything a client ever learns about the host's private ``Y`` flows
+    through the noisy teacher votes (§3.2.2) — this helper exposes exactly
+    that channel for the measured-leakage harness: query the trained
+    teacher ensemble on ``rows`` and return the mean noisy vote label over
+    ``rounds`` independent Laplace draws, shape ``(len(rows),)`` in [0, 1].
+    Each round spends privacy budget in the real protocol; the harness uses
+    multiple rounds to emulate a persistent attacker averaging out noise.
+    """
+    probs = jax.vmap(lambda tp: _disc_prob(tp, rows))(host_params["teachers"])
+    votes = teacher_votes(probs)
+    labels = [
+        np.asarray(pate_vote(k, votes, lam)[0], np.float64)
+        for k in jax.random.split(key, rounds)
+    ]
+    return np.mean(labels, axis=0)

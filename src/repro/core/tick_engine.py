@@ -143,6 +143,11 @@ class EntrySpec:
     score: str                 # "accuracy" | "hit10" | "none"
     lp_batch: int              # hit10 chunk size (mirrors link_prediction)
     block_e: int
+    #: Byzantine robust-acceptance mode over synthesized rows (ppat entries;
+    #: "none" keeps the defenses-off trace byte-identical)
+    robust: str = "none"
+    #: whether the entry emits the cosine-shift screen statistic
+    cos: bool = False
 
 
 def _extend_params(
@@ -213,6 +218,22 @@ def entry_graph(inp: Dict[str, jnp.ndarray], spec: EntrySpec) -> Dict:
         if spec.refine:
             refine_mat = procrustes(synth, y)
             synth = synth @ refine_mat
+        if spec.robust != "none" or spec.cos:
+            # robust acceptance over the ENTITY rows of the synthesized
+            # release (relation glue rows pass through untouched), on the
+            # same padded shapes the serial path hands robust_rows — the
+            # defenses-armed parity contract
+            from repro.core.aggregation import robust_rows_graph
+
+            n_rob = (
+                jnp.int32(inp["idx_c"].shape[0]) if "rel_c" in inp
+                else inp["n_x"]
+            )
+            synth, mean_cos = robust_rows_graph(
+                y, synth, n_rob, mode=spec.robust, want_cos=spec.cos,
+            )
+            if spec.cos:
+                out["mean_cos"] = mean_cos
         p = dict(p)
         if "rel_c" in inp:
             n_ent = inp["idx_c"].shape[0]
@@ -712,6 +733,7 @@ class TickEngine:
         placement: Optional[str] = None,
         residency: Optional[str] = None,
         faults=None,
+        adversary=None,
         deadline: Optional[float] = None,
     ) -> List:
         """Run one planned tick batched; returns the FederationEvents, in
@@ -728,8 +750,15 @@ class TickEngine:
         simulated delay to the entry's measured wall-clock, tripping
         ``deadline`` — late results are discarded through the normal
         backtrack restore and the handshake deferred. One failing entry
-        never aborts the tick."""
-        from repro.core.faults import CorruptEmbeddingError, screen_rows
+        never aborts the tick.
+
+        ``adversary`` (a ``core.adversary.Adversary``, default ``None`` =
+        the bit-identical pre-attack path) tampers client views at the same
+        fixed point as the serial engine: view → adversary tamper → fault
+        corruption → receiver screens, all before any key is consumed — so
+        the engines' key streams AND the adversary's replay cache stay in
+        lockstep."""
+        from repro.core.faults import CorruptEmbeddingError
         from repro.core.federation import FederationEvent, NodeState
         from repro.kge.eval import _metrics, best_threshold_accuracy
         from repro.kernels.dispatch import (
@@ -765,6 +794,7 @@ class TickEngine:
         protos: List[Optional[Tuple[Dict, List]]] = [None] * n
         owners: List[str] = [e.host for e in entries]
         entry_faults: List = [None] * n
+        entry_attacks: List = [None] * n
         #: FederationEvents of entries isolated before dispatch
         pre_events: List[Optional[FederationEvent]] = [None] * n
         for i, e in enumerate(entries):
@@ -774,6 +804,23 @@ class TickEngine:
                 if faults is not None else None
             )
             entry_faults[i] = fault
+            atk = (
+                adversary.draw(tick, e.host, e.client)
+                if adversary is not None and e.kind == "ppat" else None
+            )
+            entry_attacks[i] = atk
+            pair = cview = None
+            if atk is not None:
+                # adversary tamper happens BEFORE crash/drop isolation (the
+                # serial loop tampers every planned view): a replay attack's
+                # stale-view cache must advance identically in both engines
+                # even when the entry then dies to an injected fault
+                pair = self._pair_info(e.client, e.host)
+                cview = e.client_view or dict(sched.trainers[e.client].params)
+                cview = adversary.tamper_view(
+                    cview, atk, tick, e.host, e.client,
+                    rows=pair["screen_idx"],
+                )
             if fault is not None and fault.kind in ("crash", "drop"):
                 # host dies / offer message lost before any work — isolated
                 # BEFORE the PPAT key split and the engine-key consume, so
@@ -786,10 +833,13 @@ class TickEngine:
                 continue
             metric = self._metric_kind()
             score_info = self._score_info(e.host)
-            pair = cview = None
             if e.kind == "ppat":
-                pair = self._pair_info(e.client, e.host)
-                cview = e.client_view or dict(sched.trainers[e.client].params)
+                if pair is None:
+                    pair = self._pair_info(e.client, e.host)
+                    cview = (
+                        e.client_view
+                        or dict(sched.trainers[e.client].params)
+                    )
                 if fault is not None and fault.kind == "corrupt":
                     cview = faults.corrupt_view(cview, fault, tick, e.host)
                 if faults is not None:
@@ -798,10 +848,8 @@ class TickEngine:
                     # neighbors), before any key is consumed — the engines
                     # stay in lockstep on every stream
                     try:
-                        screen_rows(
-                            np.asarray(cview["ent"])[pair["screen_idx"]],
-                            bound=faults.norm_bound, host=e.host,
-                            client=e.client, what="client embeddings",
+                        sched.screen_incoming(
+                            e.host, e.client, cview, bound=faults.norm_bound
                         )
                     except CorruptEmbeddingError:
                         sched._entry_failed(e.host, e.client, "corrupt")
@@ -853,7 +901,8 @@ class TickEngine:
                 res.append((pair, names))
                 kw.update(
                     cfg=sched.ppat_cfg, batch=pair["batch"],
-                    renorm=pair["renorm"],
+                    renorm=pair["renorm"], robust=sched.robust_agg,
+                    cos=sched.cos_screen is not None,
                 )
             else:
                 own = self._own_info(e.host)
@@ -958,7 +1007,16 @@ class TickEngine:
             if fault is not None and fault.kind == "straggle":
                 elapsed += fault.delay
             straggled = deadline is not None and elapsed > deadline
-            accepted = after > before and not straggled
+            # cosine-shift accept gate (see federate_once): same statistic,
+            # same reputation-sharpened threshold, same decision
+            mean_cos = None
+            if e.kind == "ppat" and spec.cos:
+                mean_cos = float(out["mean_cos"])
+            poisoned = (
+                mean_cos is not None and not straggled
+                and mean_cos < sched._cos_tau(e.client)
+            )
+            accepted = after > before and not straggled and not poisoned
             if accepted:
                 tr.params = dict(out["params"])
                 sched.best_score[e.host] = after
@@ -969,18 +1027,27 @@ class TickEngine:
                 # conditional: a mid-tick quarantine (this host blamed as
                 # the client of another entry) survives its own completion
                 sched.state[e.host] = NodeState.READY
+            atk = entry_attacks[i]
+            fault_kind = (
+                "straggle" if straggled else ("poison" if poisoned else None)
+            )
             ev = FederationEvent(
                 tick, e.host, e.client,
                 "ppat" if e.kind == "ppat" else "self-train",
                 before, after, accepted, epsilon=epsilon, seconds=elapsed,
-                fault="straggle" if straggled else None,
+                fault=fault_kind,
+                attack=atk.kind if atk is not None else None,
             )
             sched.events.append(ev)
             events.append(ev)
             if accepted:
                 sched.broadcast(e.host)
+                if e.kind == "ppat":
+                    sched._rep_recover(e.host, e.client)
             if straggled:
                 sched._entry_failed(e.host, e.client, "straggle", emit=False)
+            elif poisoned:
+                sched._entry_failed(e.host, e.client, "poison", emit=False)
             else:
                 sched._note_entry_ok(e.host, e.client)
         return events

@@ -8,7 +8,6 @@ the batch PartitionSpec.
 """
 from __future__ import annotations
 
-import hashlib
 from dataclasses import dataclass
 from typing import Dict, Iterator, Optional
 

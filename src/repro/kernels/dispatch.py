@@ -181,6 +181,28 @@ def resolve_tick_faults(spec=None):
     return spec
 
 
+def resolve_tick_adversary(spec=None):
+    """Resolve the federation adversarial-peer layer: returns ``None`` (off
+    — the default, keeping the tick fast path bit-identical to the
+    pre-attack engine) or an adversary description the scheduler hands to
+    ``core.adversary.AdversaryPlan.parse``.
+
+    ``spec`` may be a spec string, an already-built ``AdversaryPlan`` /
+    ``Adversary`` (handed through verbatim — the test harness path), or
+    ``None`` to consult ``REPRO_TICK_ADVERSARY``. Off-values (``off``/
+    ``0``/``false``/``none``/empty) resolve to ``None``.
+    """
+    if spec is not None and not isinstance(spec, str):
+        return spec  # AdversaryPlan / Adversary passed programmatically
+    if spec is None:
+        spec = os.environ.get("REPRO_TICK_ADVERSARY", "").strip() or None
+    if spec is None:
+        return None
+    if spec.strip().lower() in _FALSY + ("", "none"):
+        return None
+    return spec
+
+
 def resolve_rank_impl(impl: Optional[str] = None) -> str:
     """Pick the fused-rank engine implementation: ``pallas`` or ``xla``.
 

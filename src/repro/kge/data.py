@@ -12,7 +12,6 @@ federation *can* help, which is the property the paper's experiments rely on.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 

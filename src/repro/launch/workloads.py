@@ -13,7 +13,6 @@ Shape semantics:
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax

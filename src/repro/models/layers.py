@@ -8,8 +8,6 @@ accumulate in fp32.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -15,7 +15,7 @@ from __future__ import annotations
 import functools
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -52,6 +52,39 @@ class KGECandidateRanker:
         )
         self._hr_t, self._rt_h = _filter_mask(known, model.num_entities)
 
+    # ---- request validation ----------------------------------------------
+    def _check_ids(self, name: str, ids: np.ndarray, limit: int) -> np.ndarray:
+        """Serving boundary: ids arrive from untrusted callers, and an
+        out-of-range id would otherwise gather from the wrong row (negative
+        wraps) or crash deep inside a jitted kernel with a shape error."""
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        bad = ids[(ids < 0) | (ids >= limit)]
+        if bad.size:
+            raise ValueError(
+                f"{name} ids must be in [0, {limit}); got "
+                f"{bad[:5].tolist()}{'…' if bad.size > 5 else ''}"
+            )
+        return ids
+
+    def _check_query(self, h: np.ndarray, r: np.ndarray) -> None:
+        """A NaN/Inf row in the tables poisons every rank it touches (it
+        compares incomparably against the whole entity table), so a query
+        that would serve from one is refused up front with the id named."""
+        for name, idx, key in (("entity", h, "ent"), ("relation", r, "rel")):
+            for k in (key, key + "_im"):
+                tab = self.params.get(k)
+                if tab is None:
+                    continue
+                rows = np.asarray(tab)[idx]
+                finite = np.isfinite(rows).all(axis=-1)
+                if not finite.all():
+                    bad = idx[~finite]
+                    raise ValueError(
+                        f"non-finite query embedding: {name} ids "
+                        f"{bad[:5].tolist()}{'…' if bad.size > 5 else ''} "
+                        f"have NaN/Inf rows in params[{k!r}]"
+                    )
+
     # ---- filtered ranking ------------------------------------------------
     def _filt_rows(self, lookup, keys, gold):
         rows = [sorted(set(lookup.get(k, ())) | {int(g)}) for k, g in zip(keys, gold)]
@@ -65,7 +98,10 @@ class KGECandidateRanker:
         """Filtered rank of each gold tail t among all entities — (B,) int."""
         from repro.kge.eval import streaming_side_counts
 
-        h, r, t = (np.asarray(x, np.int64).reshape(-1) for x in (h, r, t))
+        h = self._check_ids("head entity", h, self.model.num_entities)
+        t = self._check_ids("tail entity", t, self.model.num_entities)
+        r = self._check_ids("relation", r, self.model.num_relations)
+        self._check_query(h, r)
         chunk = np.stack([h, r, t], axis=1)
         filt_t = self._filt_rows(self._hr_t, zip(h.tolist(), r.tolist()), t)
         counts = streaming_side_counts(
@@ -80,8 +116,11 @@ class KGECandidateRanker:
         (B, k). Streams the entity table blockwise with a carried top-k."""
         from repro.kge.models import lp_query_tails
 
-        h = jnp.asarray(np.asarray(h, np.int64).reshape(-1))
-        r = jnp.asarray(np.asarray(r, np.int64).reshape(-1))
+        h_np = self._check_ids("head entity", h, self.model.num_entities)
+        r_np = self._check_ids("relation", r, self.model.num_relations)
+        self._check_query(h_np, r_np)
+        h = jnp.asarray(h_np)
+        r = jnp.asarray(r_np)
         b = h.shape[0]
         if exclude_known and self._hr_t:
             width = max(len(v) for v in self._hr_t.values())

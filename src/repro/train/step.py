@@ -6,13 +6,13 @@ These are what the launcher and the multi-pod dry-run lower: a single
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.model import decode_step as _decode
-from repro.models.model import init_params, prefill as _prefill, init_cache
+from repro.models.model import init_params, prefill as _prefill
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
 from repro.optim.schedule import cosine_schedule
 from repro.train.loss import lm_loss

@@ -1,0 +1,385 @@
+"""Byzantine adversary layer: attack plans, tampering, robust acceptance,
+reputation, engine parity under storm, and leakage-attack scoring units."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.adversary import Adversary, AdversaryPlan, Attack
+from repro.core.aggregation import robust_rows
+from repro.core.federation import FederationScheduler
+from repro.core.ppat import PPATConfig
+from repro.kge.data import synthesize_universe
+
+
+@pytest.fixture(scope="module")
+def universe():
+    stats = [("A", 12, 90000, 300000), ("B", 10, 70000, 240000),
+             ("C", 8, 60000, 200000)]
+    aligns = [("A", "B", 30000), ("B", "C", 20000), ("A", "C", 18000)]
+    return synthesize_universe(
+        seed=1, scale=1 / 500, kg_stats=stats, alignments=aligns
+    )
+
+
+def _mini_fed(universe, **kw):
+    defaults = dict(
+        dim=16, ppat_cfg=PPATConfig(steps=3, seed=0),
+        local_epochs=2, update_epochs=1, seed=0,
+    )
+    defaults.update(kw)
+    return FederationScheduler(universe, **defaults)
+
+
+def _event_key(e):
+    return (e.tick, e.host, e.client or "", e.kind, e.fault or "",
+            e.attack or "", e.accepted,
+            repr(e.score_before), repr(e.score_after), repr(e.epsilon))
+
+
+def _assert_params_equal(a, b, msg):
+    for n in a.trainers:
+        for k in a.trainers[n].params:
+            np.testing.assert_array_equal(
+                np.asarray(a.trainers[n].params[k]),
+                np.asarray(b.trainers[n].params[k]),
+                err_msg=f"{msg}: {n}.{k}",
+            )
+
+
+# ------------------------------------------------------------------ the plan
+def test_adversary_plan_parse_and_determinism():
+    plan = AdversaryPlan.parse(
+        "drift=0.4,sybil=0.2,peers=B+C,seed=7,until=9,strength=0.8,"
+        "evade=0.85,frac=0.5"
+    )
+    assert plan.drift == 0.4 and plan.sybil == 0.2 and plan.replay == 0.0
+    assert plan.peers == ("B", "C") and plan.seed == 7 and plan.until == 9
+    assert plan.strength == 0.8 and plan.evade == 0.85 and plan.frac == 0.5
+    draws = [plan.draw(t, "A", "B") for t in range(1, 30)]
+    assert draws == [plan.draw(t, "A", "B") for t in range(1, 30)]
+    # storm window closes after `until`
+    assert all(d is None for t, d in zip(range(1, 30), draws) if t > 9)
+    # peers restriction: A is not adversarial; self-train never attacks
+    assert all(plan.draw(t, "B", "A") is None for t in range(1, 30))
+    assert plan.draw(1, "A", None) is None
+    assert AdversaryPlan.parse("on") == AdversaryPlan()
+    with pytest.raises(ValueError):
+        AdversaryPlan.parse("drift=1.5")
+    with pytest.raises(ValueError):
+        AdversaryPlan.parse("bogus=1")
+    with pytest.raises(ValueError):
+        AdversaryPlan.parse("drift")
+
+
+def test_tamper_norm_evasion_and_determinism():
+    """Tampered rows stay strictly inside the receiver's norm screen (the
+    whole point of the adversary: the integrity layer passes it), the
+    poisoned subset is the seeded `frac` fraction, and two independent
+    Adversary instances tamper bit-identically."""
+    plan = AdversaryPlan.parse("drift=1.0,seed=3,strength=1.0,frac=0.5,bound=4.0")
+    rows = np.arange(20)
+    view = {"ent": jnp.asarray(np.random.default_rng(0).normal(size=(32, 8)),
+                               dtype=jnp.float32)}
+    atk = Attack("drift", strength=1.0, evade=0.9, frac=0.5)
+    out1 = Adversary(plan).tamper_view(dict(view), atk, 2, "A", "B", rows=rows)
+    out2 = Adversary(plan).tamper_view(dict(view), atk, 2, "A", "B", rows=rows)
+    np.testing.assert_array_equal(np.asarray(out1["ent"]),
+                                  np.asarray(out2["ent"]))
+    ent0, ent1 = np.asarray(view["ent"]), np.asarray(out1["ent"])
+    changed = np.where(np.any(ent0 != ent1, axis=1))[0]
+    assert len(changed) == 10  # frac=0.5 of 20 targeted rows
+    assert set(changed) <= set(rows.tolist())
+    # finite and norm-evading: ≤ evade * bound, so screen_rows passes
+    assert np.isfinite(ent1).all()
+    assert (np.linalg.norm(ent1[changed], axis=1) <= 0.9 * 4.0 + 1e-5).all()
+    # sybil direction is shared across clients; drift is per-client
+    adv = Adversary(plan)
+    assert np.allclose(adv._direction("B", 8, "sybil"),
+                       adv._direction("C", 8, "sybil"))
+    assert not np.allclose(adv._direction("B", 8, "drift"),
+                           adv._direction("C", 8, "drift"))
+
+
+def test_replay_caches_first_view_then_reships_it():
+    plan = AdversaryPlan.parse("replay=1.0,seed=1")
+    adv = Adversary(plan)
+    atk = Attack("replay")
+    v1 = {"ent": jnp.ones((4, 3), jnp.float32)}
+    v2 = {"ent": jnp.full((4, 3), 9.0, jnp.float32)}
+    out1 = adv.tamper_view(v1, atk, 1, "A", "B", rows=np.arange(4))
+    np.testing.assert_array_equal(np.asarray(out1["ent"]), np.ones((4, 3)))
+    # second fire ships the CACHED view, not the fresh one
+    out2 = adv.tamper_view(v2, atk, 2, "A", "B", rows=np.arange(4))
+    np.testing.assert_array_equal(np.asarray(out2["ent"]), np.ones((4, 3)))
+    # cache round-trips through the checkpoint surface
+    tree = adv.stale_arrays()
+    assert list(tree) == ["B::A"]
+    adv2 = Adversary(plan)
+    adv2.load_stale(tree)
+    out3 = adv2.tamper_view(v2, atk, 3, "A", "B", rows=np.arange(4))
+    np.testing.assert_array_equal(np.asarray(out3["ent"]), np.ones((4, 3)))
+
+
+# ------------------------------------------------------- robust aggregation
+def test_robust_rows_modes_and_padded_tail():
+    rng = np.random.default_rng(0)
+    n, pad, d = 20, 32, 8
+    cur = jnp.asarray(rng.normal(size=(pad, d)), jnp.float32)
+    synth = cur + jnp.asarray(0.05 * rng.normal(size=(pad, d)), jnp.float32)
+    # one Byzantine row: a huge targeted delta
+    synth = synth.at[3].set(cur[3] + 50.0)
+    out_none, cos_none = robust_rows(
+        cur, synth, jnp.int32(n), mode="none", want_cos=True
+    )
+    np.testing.assert_array_equal(np.asarray(out_none), np.asarray(synth))
+    for mode in ("clip", "median", "trimmed"):
+        out, _ = robust_rows(cur, synth, jnp.int32(n), mode=mode, want_cos=False)
+        out = np.asarray(out)
+        # the outlier is clamped toward the honest delta distribution...
+        poisoned_delta = np.linalg.norm(out[3] - np.asarray(cur)[3])
+        assert poisoned_delta < 5.0, (mode, poisoned_delta)
+        # ...honest rows barely move, and rows past n pass through untouched
+        honest = [i for i in range(n) if i != 3]
+        np.testing.assert_allclose(
+            out[honest], np.asarray(synth)[honest], atol=0.35,
+            err_msg=mode,
+        )
+        np.testing.assert_array_equal(out[n:], np.asarray(synth)[n:],
+                                      err_msg=mode)
+    # mean_cos matches a numpy oracle over the true rows only
+    c, s = np.asarray(cur, np.float64), np.asarray(synth, np.float64)
+    want = np.mean([
+        float(c[i] @ s[i] / (np.linalg.norm(c[i]) * np.linalg.norm(s[i]) + 1e-12))
+        for i in range(n)
+    ])
+    assert abs(float(cos_none) - want) < 1e-5
+    with pytest.raises(ValueError, match="unknown robust_agg"):
+        from repro.core.aggregation import robust_rows_graph
+        robust_rows_graph(cur, synth, jnp.int32(n), mode="krum", want_cos=False)
+
+
+# ----------------------------------------------------------- engine parity
+ADV = "drift=0.5,sybil=0.3,replay=0.2,seed=5,strength=0.9,frac=0.5"
+
+
+@pytest.mark.parametrize(
+    "defense",
+    [dict(), dict(robust_agg="median", cos_screen=0.3)],
+    ids=["defenses-off", "defenses-on"],
+)
+def test_adversary_engine_parity(universe, defense):
+    """Both tick engines must replay the same storm bit-identically —
+    tamper order, replay-cache advancement, screens, robustization, and
+    reputation all live outside the engines' key-stream lockstep."""
+    def run(impl):
+        fed = _mini_fed(universe, tick_adversary=ADV, **defense)
+        fed.initial_training()
+        fed.run(max_ticks=3, tick_impl=impl)
+        return fed
+
+    ref, bat = run("reference"), run("batched")
+    attacks = [e.attack for e in ref.events if e.attack]
+    assert attacks, "storm never fired"
+    assert len(set(attacks)) >= 2, f"want multiple kinds, saw {set(attacks)}"
+    assert list(map(_event_key, ref.events)) == list(map(_event_key, bat.events))
+    assert ref._reputation == bat._reputation
+    _assert_params_equal(ref, bat, "adversary parity")
+
+
+def test_armed_but_inert_adversary_is_bit_identical(universe):
+    """tick_adversary="on" (zero rates) must not perturb a single decision
+    or array vs the adversary-off path — the hooks are free when idle."""
+    def run(adv):
+        fed = _mini_fed(universe, tick_adversary=adv)
+        fed.initial_training()
+        fed.run(max_ticks=2)
+        return fed
+
+    off, on = run(None), run("on")
+    assert list(map(_event_key, off.events)) == list(map(_event_key, on.events))
+    _assert_params_equal(off, on, "inert adversary")
+
+
+# ------------------------------------------------- reputation + acceptance
+def test_reputation_decay_recovery_and_screen_sharpening(universe):
+    fed = _mini_fed(universe, robust_agg="median", cos_screen=0.4,
+                    rep_decay=0.5, rep_recover=0.25)
+    fed.initial_training()
+    assert fed._defended
+    assert fed._cos_tau("B") == pytest.approx(0.4)
+    fed._entry_failed("A", "B", "poison", emit=False)
+    assert fed._reputation["B"] == pytest.approx(0.5)
+    # decayed reputation sharpens the screen toward 1.0
+    assert fed._cos_tau("B") == pytest.approx(1.0 - 0.5 * 0.6)
+    fed._entry_failed("A", "B", "poison", emit=False)
+    assert fed._reputation["B"] == pytest.approx(0.25)
+    # accepted handshakes recover additively; pristine entries are dropped
+    fed._rep_recover("A", "B")
+    assert "A" not in fed._reputation  # never decayed → stays absent
+    assert fed._reputation["B"] == pytest.approx(0.5)
+    for _ in range(2):
+        fed._rep_recover("B")
+    assert "B" not in fed._reputation
+    assert fed._cos_tau("B") == pytest.approx(0.4)
+
+
+def test_reputation_priority_ordering_when_defended(universe):
+    """With defenses armed, the lowest-reputation queued offer waits behind
+    peers in good standing; defenses off, the queue stays FIFO."""
+    from collections import deque
+
+    fed = _mini_fed(universe, robust_agg="median")
+    fed.initial_training()
+    fed._reputation = {"B": 0.2}
+    fed.queue["A"] = deque(["B", "C"])
+    fed._queued["A"] = {"B", "C"}
+    assert fed._next_offer("A") == "C"  # C pristine, B suspected
+    assert fed._next_offer("A") == "B"
+    off = _mini_fed(universe)
+    off.initial_training()
+    off._reputation = {"B": 0.2}  # state may exist, must not gate
+    off.queue["A"] = deque(["B", "C"])
+    off._queued["A"] = {"B", "C"}
+    assert off._next_offer("A") == "B"
+
+
+def test_poisoning_storm_defenses_flag_and_blame(universe):
+    """An aggressive drift storm against armed defenses: poison verdicts
+    fire, the sender (not the host) accrues blame, reputation decays, and
+    no fault escalates to an abort."""
+    fed = _mini_fed(
+        universe,
+        tick_adversary="drift=1.0,seed=9,strength=1.0,frac=0.4",
+        robust_agg="median", cos_screen=0.5,
+    )
+    fed.initial_training()
+    fed.run(max_ticks=10)
+    poisons = [e for e in fed.events if e.fault == "poison"]
+    assert poisons, "screen never fired under a full-strength storm"
+    assert all(e.attack for e in poisons), "poison verdicts on clean entries"
+    assert not [e for e in fed.events if e.fault == "error"]
+    assert fed._reputation and min(fed._reputation.values()) < 1.0
+    # poison blames the SENDER: every flagged client decayed
+    assert set(fed._reputation) <= {e.client for e in poisons}
+
+
+# -------------------------------------------------------- checkpoint resume
+def test_resume_mid_storm_bit_parity(universe, tmp_path):
+    """A run killed mid-storm and resumed replays the remaining attacks
+    bit-identically — including re-shipping the SAME cached stale views
+    (the replay cache rides the checkpoint) and the reputation state."""
+    from repro.checkpoint import restore_scheduler, save_scheduler
+
+    spec = "drift=0.4,replay=0.6,seed=2,strength=0.9,frac=0.5"
+    def make():
+        return _mini_fed(universe, tick_adversary=spec,
+                         robust_agg="median", cos_screen=0.3)
+
+    path = str(tmp_path / "storm.npz")
+    a = make()
+    a.initial_training()
+    a.run(max_ticks=2)
+    assert a._adversary is not None and a._adversary._stale, \
+        "replay cache empty — the resume test would prove nothing"
+    cut = a._tick
+    stale_at_save = sorted(a._adversary._stale)
+    save_scheduler(path, a)
+    a.run(max_ticks=2)
+
+    b = make()
+    restore_scheduler(path, b)
+    assert b._adversary is not None
+    assert sorted(b._adversary._stale) == stale_at_save
+    assert b._reputation == {
+        k: float(v) for k, v in a._reputation.items()
+    } or b._reputation == a._reputation
+    b.run(max_ticks=2)
+    tail = [e for e in a.events if e.tick > cut]
+    assert tail and list(map(_event_key, tail)) == list(map(_event_key, b.events))
+    _assert_params_equal(a, b, "resume mid-storm")
+
+
+def test_restore_refuses_stale_cache_without_adversary(universe, tmp_path):
+    from repro.checkpoint import restore_scheduler, save_scheduler
+
+    a = _mini_fed(universe, tick_adversary="replay=1.0,seed=2")
+    a.initial_training()
+    a.run(max_ticks=2)
+    assert a._adversary._stale
+    path = str(tmp_path / "storm.npz")
+    save_scheduler(path, a)
+    b = _mini_fed(universe)  # no tick_adversary configured
+    with pytest.raises(ValueError, match="adversary replay state"):
+        restore_scheduler(path, b)
+
+
+# ---------------------------------------------------------- attack scoring
+def test_auc_and_advantage_units():
+    from repro.core.attacks import advantage, auc
+
+    assert auc(np.array([2.0, 3.0]), np.array([0.0, 1.0])) == 1.0
+    assert auc(np.array([0.0, 1.0]), np.array([2.0, 3.0])) == 0.0
+    # heavy ties → tie-averaged ranks keep AUC at chance, not polarity-biased
+    assert auc(np.ones(50), np.ones(70)) == pytest.approx(0.5)
+    assert auc(np.array([]), np.array([1.0])) == 0.5
+    assert advantage(0.5) == 0.0 and advantage(1.0) == 1.0
+    assert advantage(0.0) == 1.0  # symmetric in score polarity
+
+
+def test_membership_inference_separates_planted_signal():
+    """A release whose geometry encodes the member triples (e_t = e_h + r̂)
+    must be attacked successfully; a random release must not."""
+    from repro.core.attacks import membership_inference
+
+    rng = np.random.default_rng(0)
+    d, n_ent = 8, 40
+    ent = rng.normal(size=(n_ent, d))
+    offset = rng.normal(size=d)
+    members = []
+    for i in range(0, 30, 2):
+        ent[i + 1] = ent[i] + offset + 0.01 * rng.normal(size=d)
+        members.append((i, 0, i + 1))
+    nonmembers = [(int(a), 0, int(b))
+                  for a, b in rng.integers(30, n_ent, size=(15, 2))]
+    rel = {i: ent[i] for i in range(n_ent)}
+    mi = membership_inference(
+        rel, np.asarray(members, np.int64), np.asarray(nonmembers, np.int64)
+    )
+    assert mi["auc"] > 0.9 and mi["n_member"] == 15
+    noise = {i: rng.normal(size=d) for i in range(n_ent)}
+    mi0 = membership_inference(
+        noise, np.asarray(members, np.int64), np.asarray(nonmembers, np.int64)
+    )
+    assert abs(mi0["auc"] - 0.5) < 0.35  # no structure → near chance
+
+
+def test_reconstruction_attack_units():
+    from repro.core.attacks import reconstruction_attack
+
+    rng = np.random.default_rng(1)
+    true = rng.normal(size=(30, 6))
+    # released = rotated true: procrustes must recover it exactly
+    q, _ = np.linalg.qr(rng.normal(size=(6, 6)))
+    rec = reconstruction_attack(true @ q, true)
+    assert rec["cosine"] > 0.999 and rec["mse"] < 1e-10
+    noise = reconstruction_attack(rng.normal(size=(30, 6)), true)
+    assert noise["cosine"] < 0.8
+    with pytest.raises(ValueError, match="match"):
+        reconstruction_attack(true[:5], true)
+
+
+def test_noisy_vote_labels_channel():
+    """The attacker-facing vote channel: deterministic per key, and at
+    λ=0 (clean votes) it returns the exact majority-vote labels."""
+    from repro.core.ppat import _init_host_params, noisy_vote_labels
+
+    params = _init_host_params(jax.random.PRNGKey(0), 8, PPATConfig())
+    rows = jnp.asarray(np.random.default_rng(0).normal(size=(12, 8)),
+                       jnp.float32)
+    a = noisy_vote_labels(params, rows, 0.3, jax.random.PRNGKey(1), rounds=4)
+    b = noisy_vote_labels(params, rows, 0.3, jax.random.PRNGKey(1), rounds=4)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (12,) and ((a >= 0) & (a <= 1)).all()
+    clean = noisy_vote_labels(params, rows, 0.0, jax.random.PRNGKey(2))
+    assert set(np.unique(clean)) <= {0.0, 1.0}

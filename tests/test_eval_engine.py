@@ -244,3 +244,39 @@ def test_candidate_ranker_rank_and_topk(tiny_kg):
             row[known_t] = -np.inf
         expect = np.argsort(-row, kind="stable")[:5]
         np.testing.assert_allclose(row[expect], scores[j], rtol=1e-6, atol=1e-6)
+
+
+def test_candidate_ranker_rejects_bad_ids(tiny_kg):
+    """Serving boundary: out-of-range / negative ids are refused with a
+    clear ValueError instead of wrapping into the wrong table row."""
+    tr = _trained(tiny_kg)
+    ranker = KGECandidateRanker(tr.params, tr.model, tiny_kg.train, block_e=64)
+    e, r = tr.model.num_entities, tr.model.num_relations
+    with pytest.raises(ValueError, match=r"head entity ids .*\[-1\]"):
+        ranker.rank_tails([-1], [0], [1])
+    with pytest.raises(ValueError, match=rf"tail entity ids .*\[{e}\]"):
+        ranker.rank_tails([0], [0], [e])
+    with pytest.raises(ValueError, match="relation ids"):
+        ranker.rank_tails([0], [r + 3], [1])
+    with pytest.raises(ValueError, match="head entity ids"):
+        ranker.topk_tails([0, e + 7], [0], k=3)
+    with pytest.raises(ValueError, match="relation ids"):
+        ranker.topk_tails([0], [-2], k=3)
+    # in-range requests still serve
+    assert ranker.rank_tails([0], [0], [1]).shape == (1,)
+
+
+def test_candidate_ranker_rejects_non_finite_query(tiny_kg):
+    """A NaN/Inf embedding row poisons every rank it participates in — a
+    query that would serve from one is refused, naming the offending id."""
+    tr = _trained(tiny_kg)
+    params = {k: np.asarray(v).copy() for k, v in tr.params.items()}
+    params["ent"][3, 0] = np.nan
+    params["rel"][1, 2] = np.inf
+    ranker = KGECandidateRanker(params, tr.model, tiny_kg.train, block_e=64)
+    with pytest.raises(ValueError, match=r"non-finite query embedding: entity ids \[3\]"):
+        ranker.rank_tails([3], [0], [1])
+    with pytest.raises(ValueError, match=r"relation ids \[1\]"):
+        ranker.topk_tails([0], [1], k=3)
+    # untouched ids still serve fine
+    assert ranker.rank_tails([0], [0], [1]).shape == (1,)

@@ -420,3 +420,68 @@ def test_chaos_soak_eight_owners_converges():
     # converged: backtrack invariant holds and federation still improved
     assert all(fed.best_score[n] >= inits[n] for n in uni)
     assert any(e.accepted and e.kind == "ppat" for e in fed.events)
+
+
+def test_quarantine_release_coinciding_with_deferred_retry_dedups(universe):
+    """Edge case: the quarantine sentence expires on the SAME tick a
+    deferred retry for the same (host, client) pair comes due — and an
+    earlier retry for that pair is also already past due. One
+    ``_release_due`` pass must fold all of it into a single queued offer,
+    never a duplicate."""
+    fed = _mini_fed(universe, backoff_ticks=2, retry_budget=3,
+                    quarantine_ticks=4)
+    fed.initial_training()
+    # drain the broadcast offers so re-queues are the only queue source
+    for n in fed.queue:
+        fed.queue[n].clear()
+        fed._queued[n].clear()
+    fed._tick = 10
+    for _ in range(3):
+        fed._entry_failed("A", "B", "crash")
+    # retries release at 12/14/18; the third blame quarantines A until 14
+    assert [r for r, _, _ in fed._deferred] == [12, 14, 18]
+    assert fed.state["A"] is NodeState.QUARANTINED
+    assert fed._quarantine_until["A"] == 14
+    fed._tick = 14
+    fed._release_due()
+    # quarantine released, and BOTH due retries (12 and 14) collapse into
+    # one queue entry for the pair
+    assert fed.state["A"] is NodeState.READY
+    assert "A" not in fed._quarantine_until
+    assert list(fed.queue["A"]) == ["B"]
+    assert fed._queued["A"] == {"B"}
+    assert fed._deferred == [(18, "A", "B")]
+
+
+def test_checkpoint_roundtrips_blame_ledger_mid_quarantine(universe, tmp_path):
+    """A checkpoint cut while a peer is serving a quarantine sentence must
+    round-trip the whole blame ledger — quarantine clock, retry counts,
+    deferred releases, reputation — and the sentence must still expire on
+    schedule in the resumed process."""
+    from repro.checkpoint import restore_scheduler, save_scheduler
+
+    def make():
+        return _mini_fed(universe, robust_agg="median", backoff_ticks=1,
+                         retry_budget=2, quarantine_ticks=5)
+
+    fed = make()
+    fed.initial_training()
+    fed._tick = 4
+    for _ in range(2):
+        fed._entry_failed("A", "B", "poison")  # poison blames the SENDER
+    assert fed.state["B"] is NodeState.QUARANTINED
+    assert fed._reputation["B"] == pytest.approx(0.25)
+    path = str(tmp_path / "quarantine.npz")
+    save_scheduler(path, fed)
+
+    b = make()
+    restore_scheduler(path, b)
+    assert b.state["B"] is NodeState.QUARANTINED
+    assert b._quarantine_until == fed._quarantine_until
+    assert b._retries == fed._retries
+    assert b._deferred == fed._deferred
+    assert b._peer_failures == fed._peer_failures
+    assert b._reputation == pytest.approx(fed._reputation)
+    b._tick = b._quarantine_until["B"]
+    b._release_due()
+    assert b.state["B"] is NodeState.READY and not b._quarantine_until

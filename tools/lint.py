@@ -1,0 +1,129 @@
+"""Tier-1 lint gate (``make lint``) with zero hard dependencies.
+
+Prefers a real linter when one is on the box (``ruff``, then ``pyflakes``);
+otherwise falls back to a stdlib-``ast`` pass that catches the two defects
+that actually rot in this repo — module-level imports that nothing uses,
+and the same name imported twice — without inventing style opinions.
+
+The fallback is deliberately conservative: a name counts as used if it
+appears as ANY identifier anywhere in the module (including inside quoted
+annotations and docstrings), so it can underreport but not false-positive
+on ``from __future__ import annotations``-style string types. ``# noqa``
+on the import line suppresses, same as the real linters.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import shutil
+import subprocess
+import sys
+
+TARGETS = ("src", "benchmarks", "tests", "tools")
+
+
+def _py_files(root: str):
+    for target in TARGETS:
+        base = os.path.join(root, target)
+        for dirpath, _, names in os.walk(base):
+            for n in sorted(names):
+                if n.endswith(".py"):
+                    yield os.path.join(dirpath, n)
+
+
+def _bound_names(node):
+    """Names an import statement binds at module scope."""
+    out = []
+    for a in node.names:
+        if a.name == "*":
+            continue
+        bound = a.asname or a.name.split(".")[0]
+        out.append(bound)
+    return out
+
+
+def _check_file(path: str):
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [(e.lineno or 0, f"syntax error: {e.msg}")]
+    lines = src.splitlines()
+
+    imports = []  # (lineno, bound name)
+    for node in tree.body:
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            if isinstance(node, ast.ImportFrom) and node.module == "__future__":
+                continue
+            line = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
+            if "# noqa" in line:
+                continue
+            for name in _bound_names(node):
+                imports.append((node.lineno, name))
+
+    # every identifier anywhere in the module (walk covers annotations,
+    # decorators, nested scopes); string constants are scanned too so a
+    # name referenced only inside a quoted annotation stays "used"
+    used = set()
+    strings = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            used.add(node.attr)
+        elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+            strings.append(node.value)
+    blob = "\n".join(strings)
+
+    problems = []
+    seen = {}
+    for lineno, name in imports:
+        if name in seen:
+            problems.append(
+                (lineno, f"duplicate import of {name!r} (first at line "
+                         f"{seen[name]})")
+            )
+            continue
+        seen[name] = lineno
+        if name not in used and name not in blob:
+            problems.append((lineno, f"unused import {name!r}"))
+    return problems
+
+
+def _fallback(root: str) -> int:
+    failures = 0
+    for path in _py_files(root):
+        if os.path.basename(path) == "__init__.py":
+            continue  # re-export surface: "unused" imports are the point
+        for lineno, msg in _check_file(path):
+            rel = os.path.relpath(path, root)
+            print(f"{rel}:{lineno}: {msg}")
+            failures += 1
+    if failures:
+        print(f"lint: {failures} problem(s)", file=sys.stderr)
+        return 1
+    print("lint: clean (stdlib ast fallback)")
+    return 0
+
+
+def main() -> int:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if shutil.which("ruff"):
+        return subprocess.call(
+            ["ruff", "check", *(t for t in TARGETS
+                                if os.path.isdir(os.path.join(root, t)))],
+            cwd=root,
+        )
+    try:
+        import pyflakes  # noqa
+    except ImportError:
+        return _fallback(root)
+    files = list(_py_files(root))
+    return subprocess.call(
+        [sys.executable, "-m", "pyflakes", *files], cwd=root
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main())
