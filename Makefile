@@ -1,7 +1,7 @@
 PY := PYTHONPATH=src python
 
-.PHONY: tier1 test check-hygiene lint bench-eval bench-train bench-tick bench \
-	bench-json bench-smoke chaos-smoke attack-smoke
+.PHONY: tier1 test check-hygiene lint bench-eval bench-train bench-tick \
+	bench-serve bench bench-json bench-smoke chaos-smoke attack-smoke
 
 # CI gate: repo hygiene + lint, the full suite, the engine parity tests
 # explicitly (they are the acceptance bars for the streaming fused-rank eval
@@ -71,6 +71,12 @@ bench-train:
 # real multi-device placement on CPU CI
 bench-tick:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" PYTHONPATH=src:. python benchmarks/bench_federation_tick.py --csv benchmarks/federation_tick.csv
+
+# serving tier under load at E=10⁶: per-call vs continuously batched,
+# closed + open (Poisson) loops with p50/p99/QPS, and hot-swap under live
+# federation ticks; 4 simulated host devices so replica routing is real
+bench-serve:
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" PYTHONPATH=src:. python benchmarks/bench_serving.py --csv benchmarks/serving.csv
 
 bench:
 	PYTHONPATH=src:. python benchmarks/run.py

@@ -1,0 +1,257 @@
+"""Serving tier under load: continuous batching vs per-call, with hot-swap.
+
+Closed-loop (fixed concurrency) and open-loop (Poisson arrivals) generators
+drive single-query rank requests through ``KGEServingTier`` at E ≥ 10⁶ and
+report p50/p99 latency and queries/sec, against a per-call
+``KGECandidateRanker`` baseline (the pre-tier serving surface). A second
+scenario attaches the tier to a live 2-owner federation and serves the same
+traffic WHILE ticks land — every accepted update hot-swaps the serving
+tables, and the run asserts zero failed requests across the version flips.
+
+In-bench invariants (smoke included): batched results bit-equal the
+per-call ranker, zero failures everywhere, ≥ 1 version flip in the
+federation scenario; the ≥ 3× batched-vs-per-call throughput bar is
+asserted on full (non-smoke) runs.
+
+Rows: ``serving.percall.E{N}`` / ``serving.closed.E{N}`` (µs/query),
+``serving.closed.{p50,p99}_ms.E{N}`` / ``.qps.E{N}``, the same for
+``serving.open.*`` (λ = 70% of measured closed-loop capacity),
+``serving.speedup.E{N}`` (dimensionless), and
+``serving.{noticks,with_ticks}.E{N}`` for the federation scenario.
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import emit, pick, smoke
+from repro.serving import KGECandidateRanker, KGEServingTier, QueryRequest
+
+
+def _tri(rng, n, e, r):
+    return np.stack(
+        [rng.integers(0, e, n), rng.integers(0, r, n), rng.integers(0, e, n)],
+        axis=1,
+    ).astype(np.int64)
+
+
+def _lat_ms(reqs: List[QueryRequest], q: float) -> float:
+    return float(np.percentile([r.latency for r in reqs], q) * 1e3)
+
+
+def _pump(tier) -> None:
+    if tier.queue:
+        tier.step()
+    elif tier.inflight:
+        tier._reap(block=True)
+
+
+def closed_loop(tier, queries: np.ndarray, *, concurrency: int):
+    """Fixed-pressure generator: keep ``concurrency`` single-query requests
+    outstanding until the list drains. Returns (requests, wall seconds)."""
+    reqs: List[QueryRequest] = []
+    live: List[QueryRequest] = []
+    i, n = 0, len(queries)
+    t0 = time.perf_counter()
+    while i < n or live:
+        live = [q for q in live if not q.done]
+        while i < n and len(live) < concurrency:
+            q = queries[i]
+            req = tier.submit_rank(q[:1], q[1:2], q[2:3])
+            reqs.append(req)
+            live.append(req)
+            i += 1
+        if tier.queue or tier.inflight:
+            _pump(tier)
+    return reqs, time.perf_counter() - t0
+
+
+def open_loop(tier, queries: np.ndarray, *, rate_qps: float, seed: int = 0):
+    """Poisson-arrival generator at ``rate_qps``: latency is measured from
+    each request's ARRIVAL time, so queueing delay under bursts counts."""
+    rng = np.random.default_rng(seed)
+    n = len(queries)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_qps, size=n))
+    reqs: List[QueryRequest] = []
+    i = 0
+    t0 = time.perf_counter()
+    while len(reqs) < n or tier.queue or tier.inflight:
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i] <= now:
+            q = queries[i]
+            req = tier.submit_rank(q[:1], q[1:2], q[2:3])
+            req.submitted_at = t0 + arrivals[i]
+            reqs.append(req)
+            i += 1
+        if tier.queue or tier.inflight:
+            _pump(tier)
+        elif i < n:
+            time.sleep(min(max(arrivals[i] - now, 0.0), 0.002))
+    return reqs, time.perf_counter() - t0
+
+
+def _bench_traffic(rows, *, entities, dim, n_closed, n_percall, block_e,
+                   max_batch, seed=0):
+    import jax
+
+    from repro.kge.models import KGEModel, init_kge
+
+    rng = np.random.default_rng(seed)
+    n_rel = 8
+    known = _tri(rng, 5000, entities, n_rel)
+    model = KGEModel("transe", num_entities=entities, num_relations=n_rel,
+                     dim=dim)
+    params = init_kge(jax.random.PRNGKey(seed), model)
+    ranker = KGECandidateRanker(params, model, known, block_e=block_e)
+    tier = KGEServingTier(params, model, known, block_e=block_e,
+                          max_batch=max_batch)
+    queries = _tri(rng, n_closed, entities, n_rel)
+
+    # ---- per-call baseline (the pre-tier serving surface) ----------------
+    per = queries[:n_percall]
+    ranker.rank_tails(per[:1, 0], per[:1, 1], per[:1, 2])  # warm/compile
+    t0 = time.perf_counter()
+    percall_ranks = [
+        ranker.rank_tails(q[:1], q[1:2], q[2:3]) for q in per
+    ]
+    us_percall = (time.perf_counter() - t0) / n_percall * 1e6
+
+    # ---- closed loop ----------------------------------------------------
+    warm, _ = closed_loop(tier, queries[: max_batch], concurrency=max_batch)
+    creqs, wall = closed_loop(tier, queries, concurrency=2 * max_batch)
+    assert tier.stats["failed"] == 0, tier.stats
+    us_closed = wall / n_closed * 1e6
+    qps = n_closed / wall
+    # in-bench parity: batched results bit-equal the per-call ranker
+    # (queries[j] went through both paths for j < n_percall)
+    for j in range(n_percall):
+        np.testing.assert_array_equal(creqs[j].result, percall_ranks[j])
+    e = entities
+    rows.append((f"serving.percall.E{e}", us_percall, "B=1 ranker calls"))
+    rows.append((f"serving.closed.E{e}", us_closed,
+                 f"qps={qps:.1f},batches={tier.stats['batches']}"))
+    rows.append((f"serving.closed.p50_ms.E{e}", _lat_ms(creqs, 50), "latency"))
+    rows.append((f"serving.closed.p99_ms.E{e}", _lat_ms(creqs, 99), "latency"))
+    rows.append((f"serving.closed.qps.E{e}", qps, "queries/sec"))
+
+    # ---- open loop at 70% of measured capacity --------------------------
+    oreqs, owall = open_loop(tier, queries, rate_qps=0.7 * qps, seed=seed + 1)
+    assert tier.stats["failed"] == 0, tier.stats
+    oqps = len(oreqs) / owall
+    rows.append((f"serving.open.p50_ms.E{e}", _lat_ms(oreqs, 50),
+                 f"poisson λ={0.7 * qps:.1f}/s"))
+    rows.append((f"serving.open.p99_ms.E{e}", _lat_ms(oreqs, 99), "latency"))
+    rows.append((f"serving.open.qps.E{e}", oqps, "queries/sec"))
+
+    speedup = us_percall / us_closed
+    rows.append((f"serving.speedup.E{e}", speedup,
+                 f"batched vs percall {speedup:.1f}x"))
+    if not smoke():
+        assert speedup >= 3.0, (
+            f"batched serving {speedup:.2f}x < 3x per-call baseline"
+        )
+
+
+def _bench_with_ticks(rows, *, dim, steps, epochs, max_ticks, n_queries,
+                      max_batch, seed=0):
+    """Serve closed-loop traffic while a federation ticks in a background
+    thread — every accepted update hot-swaps the tier's tables mid-load."""
+    import itertools
+
+    from benchmarks.common import small_universe
+    from repro.core.federation import FederationScheduler
+    from repro.core.ppat import PPATConfig
+
+    uni = small_universe(seed=seed, n=2)
+    ctr = itertools.count()
+    # monotone score ⇒ deterministic accepts ⇒ the flip count is pinned by
+    # the tick plan, not by tiny-universe training luck
+    sched = FederationScheduler(
+        uni, dim=dim, ppat_cfg=PPATConfig(steps=steps, seed=0),
+        local_epochs=epochs, update_epochs=max(2, epochs // 2), seed=0,
+        score_fn=lambda name: float(next(ctr)),
+    )
+    sched.initial_training()
+    tier = KGEServingTier.for_owner(sched, "Alpha", max_batch=max_batch,
+                                    block_e=512)
+    e = sched.trainers["Alpha"].model.num_entities
+    rng = np.random.default_rng(seed + 2)
+    queries = _tri(rng, n_queries, uni["Alpha"].num_entities, 4)
+
+    # baseline: the same traffic with no concurrent federation
+    warm, _ = closed_loop(tier, queries[:max_batch], concurrency=max_batch)
+    nreqs, nwall = closed_loop(tier, queries, concurrency=2 * max_batch)
+    assert tier.stats["failed"] == 0
+    rows.append((f"serving.noticks.E{e}", nwall / n_queries * 1e6,
+                 f"p99={_lat_ms(nreqs, 99):.1f}ms"))
+
+    v_before = tier.version
+    th = threading.Thread(target=lambda: sched.run(max_ticks=max_ticks))
+    th.start()
+    reqs: List[QueryRequest] = []
+    # bounded traffic spread across the federation's lifetime: a free-running
+    # loop would issue ~100k requests on fast hosts and blow the smoke budget
+    # gap-throttled passes for the thread's WHOLE lifetime: the first tick
+    # spends seconds in jit compile before any flip, so a fixed pass budget
+    # would drain before version 1 ever lands; the backstop only guards
+    # against a hung federation
+    gap_s = pick(0.1, 0.02)
+    passes, serve_s = 0, 0.0
+    while th.is_alive() and passes < 2000:
+        batch, w = closed_loop(tier, queries, concurrency=2 * max_batch)
+        reqs.extend(batch)
+        serve_s += w
+        passes += 1
+        time.sleep(gap_s)
+    th.join()
+    wall = serve_s
+    tier.run_until_drained()
+    flips = tier.version - v_before
+    assert tier.stats["failed"] == 0, tier.stats
+    assert tier.stats["publish_errors"] == 0, tier.stats
+    assert flips >= 1, "federation ran but no version flip reached serving"
+    versions = {r.version for r in reqs}
+    rows.append((
+        f"serving.with_ticks.E{e}", wall / max(len(reqs), 1) * 1e6,
+        f"flips={flips},versions_served={len(versions)},"
+        f"p99={_lat_ms(reqs, 99):.1f}ms,served={len(reqs)}",
+    ))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv", default=None, help="also append rows to this file")
+    ap.add_argument("--entities", type=int, default=pick(1_000_000, 768))
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--queries", type=int, default=pick(256, 12))
+    ap.add_argument("--percall", type=int, default=pick(16, 4))
+    ap.add_argument("--block-e", type=int, default=pick(8192, 256))
+    ap.add_argument("--max-batch", type=int, default=pick(64, 8))
+    args = ap.parse_args(argv)
+
+    rows: list = []
+    _bench_traffic(
+        rows, entities=args.entities, dim=args.dim, n_closed=args.queries,
+        n_percall=args.percall, block_e=args.block_e,
+        max_batch=args.max_batch,
+    )
+    _bench_with_ticks(
+        rows, dim=pick(24, 16), steps=pick(30, 6), epochs=pick(10, 2),
+        max_ticks=pick(3, 1), n_queries=pick(128, 10),
+        max_batch=pick(32, 8),
+    )
+
+    for name, us, derived in rows:
+        emit(name, us, derived)
+    if args.csv:
+        with open(args.csv, "a") as f:
+            for name, us, derived in rows:
+                f.write(f"{name},{us:.1f},{derived}\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,7 @@ from benchmarks import (
     bench_noise_ablation,
     bench_privacy,
     bench_roofline,
+    bench_serving,
     bench_time_cost,
     bench_train_engine,
     bench_triple_classification,
@@ -48,6 +49,7 @@ SUITES = [
     ("eval_engine", lambda: bench_eval_engine.main([])),          # fused ranks
     ("train_engine", lambda: bench_train_engine.main([])),        # sparse scan
     ("federation_tick", lambda: bench_federation_tick.main([])),  # tick engine
+    ("serving", lambda: bench_serving.main([])),                  # serving tier
     ("noise_ablation", bench_noise_ablation.main),                # Tab. 5
     ("alignment_scale", bench_alignment_scale.main),              # Tab. 6
     ("aggregation", bench_aggregation.main),                      # Tab. 7

@@ -125,6 +125,20 @@ class OwnerPlacement:
             self._slot[owner] = int(slot) % len(self.devices)
 
 
+def replica_devices(home_slot: int, n: int, devices: Optional[Sequence] = None) -> List:
+    """The serving tier's replica ring for an owner homed at ``home_slot``:
+    ``n`` consecutive mesh devices starting at the home, wrapping, and
+    clamped to the mesh size (asking for 4 replicas on a 2-device mesh
+    yields 2). Replica 0 IS the owner's sticky home device — the device
+    owner-sticky federation keeps the accepted tables resident on — so a
+    version publish's first replica copy is zero-copy by construction."""
+    devices = tuple(devices if devices is not None else jax.devices())
+    if n < 1:
+        raise ValueError(f"replica count must be >= 1, got {n}")
+    n = min(int(n), len(devices))
+    return [devices[(int(home_slot) + i) % len(devices)] for i in range(n)]
+
+
 def committed_device(tree) -> Optional[jax.Device]:
     """The single device a pytree is committed to, or ``None`` when its
     leaves are uncommitted (free to follow any computation). Used by

@@ -261,6 +261,12 @@ class FederationScheduler:
         self._queued: Dict[str, set] = {n: set() for n in kgs}
         self.best_score: Dict[str, float] = {}
         self.best_snapshot: Dict[str, dict] = {}
+        #: version-publish hook: called as ``fn(owner, tick, params)`` every
+        #: time an owner's update is ACCEPTED (initial training, handshake,
+        #: self-train — both tick engines), with the accepted params. The
+        #: serving tier subscribes here to hot-swap its table versions; the
+        #: fast path is unchanged while no listener is registered.
+        self._accept_listeners: List[Callable] = []
         self.events: List[FederationEvent] = []
         self.epsilons: List[float] = []
         # federation-lifetime privacy spend: every handshake's per-query
@@ -424,12 +430,30 @@ class FederationScheduler:
             self.events.append(
                 FederationEvent(self._tick, name, None, "init", 0.0, score, True)
             )
+            self._notify_accept(name)
         # everyone announces itself once training is done (Fig. 2, round 1)
         for name in self.trainers:
             self.broadcast(name)
         return dict(self.best_score)
 
     # --------------------------------------------------------- primitives
+    def add_accept_listener(self, fn: Callable) -> None:
+        """Subscribe ``fn(owner, tick, params)`` to accepted updates — the
+        serving tier's version-publish hook. Listeners run synchronously at
+        the accept site (AFTER the snapshot/broadcast bookkeeping) and see
+        the owner's accepted params; they must catch their own exceptions —
+        a serving-side publish failure must not abort a federation tick
+        (the tier's listener does exactly that, counting failures in its
+        stats)."""
+        self._accept_listeners.append(fn)
+
+    def _notify_accept(self, owner: str) -> None:
+        if not self._accept_listeners:
+            return
+        params = self.trainers[owner].params
+        for fn in self._accept_listeners:
+            fn(owner, self._tick, params)
+
     def broadcast(self, name: str) -> None:
         """Send handshake signal to all partners with aligned entities."""
         for partner in self.registry.partners(name):
@@ -615,6 +639,7 @@ class FederationScheduler:
         if accepted:
             self.broadcast(host)
             self._rep_recover(host, client)
+            self._notify_accept(host)
         if fault_kind is None:
             self._note_entry_ok(host, client)
         return ev
@@ -646,6 +671,7 @@ class FederationScheduler:
             self.best_score[name] = after
             self.best_snapshot[name] = tr.snapshot()
             self.broadcast(name)
+            self._notify_accept(name)
         else:
             tr.restore(self.best_snapshot[name])
         ev = FederationEvent(

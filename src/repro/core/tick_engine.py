@@ -1044,6 +1044,7 @@ class TickEngine:
                 sched.broadcast(e.host)
                 if e.kind == "ppat":
                     sched._rep_recover(e.host, e.client)
+                sched._notify_accept(e.host)
             if straggled:
                 sched._entry_failed(e.host, e.client, "straggle", emit=False)
             elif poisoned:

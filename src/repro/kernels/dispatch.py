@@ -203,6 +203,42 @@ def resolve_tick_adversary(spec=None):
     return spec
 
 
+def resolve_serve_impl(impl: Optional[str] = None) -> str:
+    """Pick the serving-tier dispatch mode: ``batched`` or ``direct``.
+
+    ``batched`` — the default: the tier coalesces queued requests into
+    bucket-padded query batches (continuous batching) so steady-state
+    traffic hits a fixed set of compiled programs; ``direct`` — one
+    dispatch per request, the per-call baseline the serving bench measures
+    batching against. ``REPRO_SERVE_IMPL`` overrides."""
+    if impl is None:
+        impl = os.environ.get("REPRO_SERVE_IMPL", "").strip().lower() or None
+    if impl is None:
+        impl = "batched"
+    if impl not in ("batched", "direct"):
+        raise ValueError(f"unknown serve impl {impl!r} (batched|direct)")
+    return impl
+
+
+def resolve_serve_replicas(n: Optional[int] = None) -> int:
+    """Pick how many table replicas the serving tier spreads over the mesh.
+
+    Explicit ``n`` wins, else ``REPRO_SERVE_REPLICAS``, else every visible
+    device capped at 4 — a single-device CI run degenerates to one replica
+    while ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (or a real
+    multi-chip mesh) turns replica routing on without touching call sites.
+    The tier clamps to the actual device count, so over-asking is safe."""
+    if n is None:
+        raw = os.environ.get("REPRO_SERVE_REPLICAS", "").strip()
+        n = int(raw) if raw else None
+    if n is None:
+        n = min(4, len(jax.devices()))
+    n = int(n)
+    if n < 1:
+        raise ValueError(f"serve replicas must be >= 1, got {n}")
+    return n
+
+
 def resolve_rank_impl(impl: Optional[str] = None) -> str:
     """Pick the fused-rank engine implementation: ``pallas`` or ``xla``.
 

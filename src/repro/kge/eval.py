@@ -86,6 +86,24 @@ def _filter_mask(all_triples: np.ndarray, num_entities: int):
     return hr_t, rt_h
 
 
+def pack_padded_filters(rows, *, width: Optional[int] = None) -> np.ndarray:
+    """Pack variable-length known-true id lists into one padded (N, W) int32
+    array (pad −1, W ≥ 1). ``width`` pins W (e.g. a pow-2 bucket so downstream
+    jits see a fixed filter shape); rows longer than ``width`` are an error
+    rather than a silent truncation — a dropped filter id would silently
+    stop excluding a known-true entity."""
+    rows = [np.asarray(x, np.int64).reshape(-1) for x in rows]
+    w = max(1, max((len(x) for x in rows), default=1))
+    if width is not None:
+        if w > width:
+            raise ValueError(f"filter row of {w} ids exceeds width {width}")
+        w = max(1, width)
+    out = np.full((len(rows), w), -1, np.int32)
+    for i, x in enumerate(rows):
+        out[i, : len(x)] = x
+    return out
+
+
 def build_filter_arrays(
     test: np.ndarray, all_triples: Optional[np.ndarray], *, filtered: bool
 ) -> Tuple[np.ndarray, np.ndarray]:
@@ -107,15 +125,7 @@ def build_filter_arrays(
     hr_t, rt_h = _filter_mask(all_triples, 0)
     tails = [sorted(hr_t[(int(h), int(r))]) for h, r, _ in test]
     heads = [sorted(rt_h[(int(r), int(t))]) for _, r, t in test]
-    ft = max(1, max(len(x) for x in tails)) if b else 1
-    fh = max(1, max(len(x) for x in heads)) if b else 1
-    filt_t = np.full((b, ft), -1, np.int64)
-    filt_h = np.full((b, fh), -1, np.int64)
-    for i, x in enumerate(tails):
-        filt_t[i, : len(x)] = x
-    for i, x in enumerate(heads):
-        filt_h[i, : len(x)] = x
-    return filt_t.astype(np.int32), filt_h.astype(np.int32)
+    return pack_padded_filters(tails), pack_padded_filters(heads)
 
 
 def build_score_inputs(
@@ -245,6 +255,31 @@ def streaming_side_counts(
         side=side, block_e=block_e, impl=resolve_rank_impl(impl),
     )
     return np.asarray(counts)
+
+
+def side_counts_dispatch(
+    params,
+    model: KGEModel,
+    h: jnp.ndarray,
+    r: jnp.ndarray,
+    t: jnp.ndarray,
+    filt: jnp.ndarray,
+    *,
+    side: str,
+    block_e: int = 512,
+    impl: Optional[str] = None,
+) -> jnp.ndarray:
+    """One ASYNC jitted dispatch of the side-count engine: device arrays in,
+    device array out, no host sync — the serving tier's batch call. Identical
+    math to ``streaming_side_counts`` (same jit, same impl resolution); the
+    caller materializes the result when it chooses (``jax.Array.is_ready``
+    polling lets batches complete out of band while new ones dispatch)."""
+    from repro.kernels.dispatch import resolve_rank_impl
+
+    return _side_counts_jit(
+        params, model, h, r, t, filt,
+        side=side, block_e=block_e, impl=resolve_rank_impl(impl),
+    )
 
 
 def streaming_rank_counts(

@@ -3,3 +3,12 @@ from repro.serving.engine import (  # noqa: F401
     Request,
     ServingEngine,
 )
+from repro.serving.tables import (  # noqa: F401
+    FilterPack,
+    TableVersion,
+)
+from repro.serving.tier import (  # noqa: F401
+    KGEServingTier,
+    QueryRequest,
+    serving_program_cache_size,
+)

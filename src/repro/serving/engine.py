@@ -36,63 +36,73 @@ class KGECandidateRanker:
     blockwise ``lax.scan`` top-k merge — in both cases the (B, E) score
     matrix never materializes, so a ranker over a 10⁶-entity table serves
     from O(B·block_e) working memory per step.
+
+    Per-request host work is O(B): the known-true filter is packed once at
+    construction into a padded CSR ``FilterPack`` (pow-2 width, so the jits
+    see one filter shape) and sliced per batch, and non-finite-row
+    validation is a bitmask lookup against the active ``TableVersion``
+    (computed once at publish) instead of pulling embedding rows per call.
+    ``swap()`` hot-swaps to a newly published version between requests —
+    the filter pack carries over (known triples outlive table versions).
     """
 
     def __init__(self, params, model, known_triples=None, *, block_e: int = 2048,
-                 impl: Optional[str] = None):
-        from repro.kge.eval import _filter_mask
+                 impl: Optional[str] = None, filters=None):
+        from repro.serving.tables import FilterPack, TableVersion
 
-        self.params = params
         self.model = model
         self.block_e = block_e
         self.impl = impl
-        known = (
-            np.zeros((0, 3), np.int64) if known_triples is None
-            else np.asarray(known_triples)
+        self.filters = (
+            filters if filters is not None
+            else FilterPack(known_triples, model.num_entities)
         )
-        self._hr_t, self._rt_h = _filter_mask(known, model.num_entities)
+        self._hr_t, self._rt_h = self.filters.hr_t, self.filters.rt_h
+        self._tv = TableVersion(params, model, self.filters, version=0)
+
+    @property
+    def params(self):
+        return self._tv.params
+
+    @property
+    def version(self) -> int:
+        return self._tv.version
+
+    def swap(self, params, *, version: Optional[int] = None):
+        """Atomically switch to a new table version (a fresh published
+        params snapshot). Requests issued after this serve the new tables;
+        the filter pack and compiled programs are reused as-is."""
+        from repro.serving.tables import TableVersion
+
+        v = self._tv.version + 1 if version is None else int(version)
+        self._tv = TableVersion(
+            params, self.model, self.filters, version=v, owner=self._tv.owner
+        )
+        return self._tv
 
     # ---- request validation ----------------------------------------------
     def _check_ids(self, name: str, ids: np.ndarray, limit: int) -> np.ndarray:
-        """Serving boundary: ids arrive from untrusted callers, and an
-        out-of-range id would otherwise gather from the wrong row (negative
-        wraps) or crash deep inside a jitted kernel with a shape error."""
-        ids = np.asarray(ids, np.int64).reshape(-1)
-        bad = ids[(ids < 0) | (ids >= limit)]
-        if bad.size:
-            raise ValueError(
-                f"{name} ids must be in [0, {limit}); got "
-                f"{bad[:5].tolist()}{'…' if bad.size > 5 else ''}"
-            )
-        return ids
+        from repro.serving.tables import check_id_range
+
+        return check_id_range(name, ids, limit)
 
     def _check_query(self, h: np.ndarray, r: np.ndarray) -> None:
         """A NaN/Inf row in the tables poisons every rank it touches (it
         compares incomparably against the whole entity table), so a query
-        that would serve from one is refused up front with the id named."""
-        for name, idx, key in (("entity", h, "ent"), ("relation", r, "rel")):
-            for k in (key, key + "_im"):
-                tab = self.params.get(k)
-                if tab is None:
-                    continue
-                rows = np.asarray(tab)[idx]
-                finite = np.isfinite(rows).all(axis=-1)
-                if not finite.all():
-                    bad = idx[~finite]
-                    raise ValueError(
-                        f"non-finite query embedding: {name} ids "
-                        f"{bad[:5].tolist()}{'…' if bad.size > 5 else ''} "
-                        f"have NaN/Inf rows in params[{k!r}]"
-                    )
+        that would serve from one is refused up front with the id named.
+        O(B) per request: the per-row verdict was precomputed at publish."""
+        self._tv.check_finite("entity", self._tv.ent_bad, h)
+        self._tv.check_finite("relation", self._tv.rel_bad, r)
 
     # ---- filtered ranking ------------------------------------------------
-    def _filt_rows(self, lookup, keys, gold):
-        rows = [sorted(set(lookup.get(k, ())) | {int(g)}) for k, g in zip(keys, gold)]
-        width = max(len(x) for x in rows)
-        out = np.full((len(rows), width), -1, np.int32)
-        for i, x in enumerate(rows):
-            out[i, : len(x)] = x
-        return out
+    def rank_filter(self, h: np.ndarray, r: np.ndarray, t: np.ndarray) -> np.ndarray:
+        """(B, width+1) int32 filter for rank queries: the gold tail in
+        column 0 (duplicates in the known row are harmless — the in-kernel
+        exclusion is a membership test) plus the precomputed CSR row slice."""
+        return np.concatenate(
+            [np.asarray(t, np.int32)[:, None], self.filters.rows_for(h, r)],
+            axis=1,
+        )
 
     def rank_tails(self, h, r, t) -> np.ndarray:
         """Filtered rank of each gold tail t among all entities — (B,) int."""
@@ -103,10 +113,9 @@ class KGECandidateRanker:
         r = self._check_ids("relation", r, self.model.num_relations)
         self._check_query(h, r)
         chunk = np.stack([h, r, t], axis=1)
-        filt_t = self._filt_rows(self._hr_t, zip(h.tolist(), r.tolist()), t)
         counts = streaming_side_counts(
-            self.params, self.model, chunk, filt_t, side="tail",
-            block_e=self.block_e, impl=self.impl,
+            self.params, self.model, chunk, self.rank_filter(h, r, t),
+            side="tail", block_e=self.block_e, impl=self.impl,
         )
         return counts + 1
 
@@ -122,13 +131,8 @@ class KGECandidateRanker:
         h = jnp.asarray(h_np)
         r = jnp.asarray(r_np)
         b = h.shape[0]
-        if exclude_known and self._hr_t:
-            width = max(len(v) for v in self._hr_t.values())
-            filt = np.full((b, width), -1, np.int32)
-            for i, key in enumerate(zip(np.asarray(h).tolist(),
-                                        np.asarray(r).tolist())):
-                known = sorted(self._hr_t.get(key, ()))
-                filt[i, : len(known)] = known
+        if exclude_known:
+            filt = self.filters.rows_for(h_np, r_np)
         else:
             filt = np.full((b, 1), -1, np.int32)
 

@@ -1,0 +1,438 @@
+"""Production KGE serving tier: continuous query batching over replicated,
+federation-versioned embedding tables.
+
+Three mechanisms, composed:
+
+**Continuous request batching** — ``submit_rank``/``submit_topk`` enqueue
+validated requests; ``step()`` coalesces the FIFO head into one query batch
+(same kind, same top-k bucket), pads the batch extent to a power-of-two
+bucket and slices filters from the precomputed pow-2-width ``FilterPack``,
+so steady-state traffic hits a FIXED set of compiled programs — the tick
+engine's signature-bucket idiom applied to queries. Batches dispatch
+asynchronously (``kge.eval.side_counts_dispatch`` — device out, no host
+sync) and results are collected by non-blocking ``jax.Array.is_ready``
+polling, so new batches launch while old ones execute.
+
+**Replica routing** — the active ``TableVersion`` is staged onto a ring of
+replica devices (``core.distributed.replica_devices``: consecutive mesh
+devices from the owner's sticky home, so replica 0 is the device the
+federation already keeps the accepted tables resident on). Each batch goes
+to the replica with the fewest in-flight batches; per-replica accounting
+lives in ``Replica.inflight``/``dispatched``.
+
+**Version hot-swap** — ``publish(params)`` builds an immutable
+``TableVersion`` (non-finite bitmask computed once), pre-stages it onto the
+replica ring with async ``device_put`` (zero-copy on the device already
+holding the committed params), and atomically flips the active pointer
+between batches. In-flight batches hold a reference to the version they
+were dispatched on and finish there — no traffic pause, no failed
+requests. ``attach(scheduler, owner)`` subscribes the tier to the
+federation's accept hook so every accepted tick update republishes.
+
+``serve_impl="direct"`` (``REPRO_SERVE_IMPL``) disables coalescing — one
+dispatch per request, the baseline ``bench_serving.py`` measures batching
+against. ``REPRO_SERVE_REPLICAS`` sizes the replica ring.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.distributed import replica_devices
+from repro.kernels.dispatch import resolve_serve_impl, resolve_serve_replicas
+from repro.kge.eval import side_counts_dispatch
+from repro.kge.models import lp_query_tails
+from repro.serving.tables import FilterPack, TableVersion, check_id_range
+
+
+def _pow2_at_least(n: int, floor: int = 1) -> int:
+    n = max(int(n), int(floor), 1)
+    return 1 << (n - 1).bit_length()
+
+
+@dataclass
+class QueryRequest:
+    """One submitted query batch-of-rows; ``result`` lands asynchronously."""
+
+    rid: int
+    kind: str                      # "rank" | "topk"
+    h: np.ndarray
+    r: np.ndarray
+    t: Optional[np.ndarray] = None  # rank only
+    k: int = 0                      # topk only
+    # perf_counter: latency math (finished_at - submitted_at) must be
+    # monotonic; time.time() jumps with NTP/clock adjustments
+    submitted_at: float = field(default_factory=time.perf_counter)
+    finished_at: Optional[float] = None
+    version: Optional[int] = None   # table version that served it
+    result: object = None
+    error: Optional[Exception] = None
+    done: bool = False
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
+
+
+class Replica:
+    """One device holding the serving tables; load = in-flight batches."""
+
+    def __init__(self, slot: int, device):
+        self.slot = slot
+        self.device = device
+        self.inflight = 0    # currently executing batches
+        self.dispatched = 0  # lifetime batch count (routing observability)
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return f"Replica({self.slot}, {self.device}, inflight={self.inflight})"
+
+
+@dataclass
+class _InFlight:
+    """A dispatched batch: device outputs + how to scatter them back."""
+
+    kind: str
+    out: Tuple                      # device arrays
+    segs: List[Tuple[QueryRequest, int, int]]  # (request, offset, rows)
+    nq: int                         # real (unpadded) query rows
+    tv: TableVersion                # version the batch was dispatched on
+    replica: Replica
+
+    def ready(self) -> bool:
+        return all(x.is_ready() for x in self.out)
+
+
+class KGEServingTier:
+    """Continuously-batched, replicated, hot-swappable KGE query serving.
+
+    The public surface is asynchronous: ``submit_rank(h, r, t)`` /
+    ``submit_topk(h, r, k=)`` return a ``QueryRequest`` immediately
+    (validation errors raise at submit); ``step()`` advances the admission
+    loop one batch; ``run_until_drained()`` pumps until every request is
+    done. Results: ``req.result`` is the (B,) rank array, or an
+    ``(ids, scores)`` pair for top-k — bit-identical to a per-call
+    ``KGECandidateRanker`` on the same table version.
+    """
+
+    def __init__(self, params, model, known_triples=None, *, owner: Optional[str] = None,
+                 block_e: int = 2048, rank_impl: Optional[str] = None,
+                 serve_impl: Optional[str] = None, replicas: Optional[int] = None,
+                 home_slot: int = 0, devices=None, max_batch: int = 64,
+                 min_bucket: int = 8, max_inflight: Optional[int] = None,
+                 filters: Optional[FilterPack] = None):
+        self.model = model
+        self.owner = owner
+        self.block_e = block_e
+        self.rank_impl = rank_impl
+        self.serve_impl = resolve_serve_impl(serve_impl)
+        self.max_batch = int(max_batch)
+        self.min_bucket = int(min_bucket)
+        self.filters = (
+            filters if filters is not None
+            else FilterPack(known_triples, model.num_entities)
+        )
+        devs = replica_devices(home_slot, resolve_serve_replicas(replicas),
+                               devices)
+        self.replicas = [Replica(i, d) for i, d in enumerate(devs)]
+        #: dispatch-ahead depth: two batches per replica keeps every device
+        #: busy while the host assembles the next batch, without unbounded
+        #: queue growth on the devices
+        self.max_inflight = (
+            2 * len(self.replicas) if max_inflight is None else int(max_inflight)
+        )
+        self.queue: Deque[QueryRequest] = deque()
+        self.inflight: Deque[_InFlight] = deque()
+        self.stats: Dict[str, int] = {
+            "served": 0, "failed": 0, "batches": 0, "published": 0,
+            "publish_errors": 0, "padded_rows": 0,
+        }
+        self._next_rid = 0
+        #: serializes publish() against itself (the federation thread) —
+        #: the serving loop only ever READS the active pointer, once per
+        #: batch, so the flip is atomic by assignment
+        self._publish_lock = threading.Lock()
+        self._active: Optional[TableVersion] = None
+        self.publish(params, version=0)
+        self.stats["published"] = 0  # the constructor's own staging isn't a flip
+
+    # ------------------------------------------------------------ publish
+    @property
+    def version(self) -> int:
+        return self._active.version
+
+    def publish(self, params, *, version: Optional[int] = None) -> TableVersion:
+        """Publish a new table version and atomically make it active.
+
+        Builds the immutable ``TableVersion`` (one on-device finiteness
+        reduction per table), pre-stages it onto every replica device with
+        asynchronous ``device_put`` (zero-copy where the params are already
+        committed — the owner's sticky home), then flips the active
+        pointer. Batches dispatched before the flip complete on the old
+        version; batches dispatched after serve the new one. No pause."""
+        with self._publish_lock:
+            v = (
+                (self._active.version + 1 if self._active is not None else 0)
+                if version is None else int(version)
+            )
+            tv = TableVersion(params, self.model, self.filters,
+                              version=v, owner=self.owner)
+            for rep in self.replicas:
+                tv.on(rep.device)
+            self._active = tv
+            self.stats["published"] += 1
+            return tv
+
+    def attach(self, sched, owner: str) -> "KGEServingTier":
+        """Subscribe to a ``FederationScheduler``'s accept hook: every
+        accepted update for ``owner`` republishes the serving tables (the
+        version hot-swap path), starting from the owner's current params.
+        Publish failures are counted, never propagated — a serving-side
+        problem must not abort a federation tick."""
+        if owner not in sched.trainers:
+            raise ValueError(f"unknown owner {owner!r}")
+        self.owner = owner
+
+        def _on_accept(name, tick, params):
+            if name != owner:
+                return
+            try:
+                self.publish(params)
+            except Exception:
+                self.stats["publish_errors"] += 1
+
+        sched.add_accept_listener(_on_accept)
+        self.publish(dict(sched.trainers[owner].params))
+        return self
+
+    @classmethod
+    def for_owner(cls, sched, owner: str, **kw) -> "KGEServingTier":
+        """A tier serving ``owner``'s tables out of a federation: filters
+        from the owner's full triple set (train ∪ valid ∪ test — the
+        standard Filter-mode universe), tables from the owner's trainer,
+        home slot from the scheduler's sticky placement when the batched
+        tick engine has one, and the accept hook attached."""
+        tr = sched.trainers[owner]
+        kg = sched.kgs[owner]
+        known = np.concatenate([kg.train, kg.valid, kg.test])
+        engine = getattr(sched, "_tick_engine", None)
+        if engine is not None and "home_slot" not in kw:
+            kw["home_slot"] = engine.placement.slot(owner)
+        tier = cls(tr.params, tr.model, known, owner=owner, **kw)
+        tier.attach(sched, owner)
+        return tier
+
+    # ------------------------------------------------------------- submit
+    def _submit(self, req: QueryRequest) -> QueryRequest:
+        self.queue.append(req)
+        return req
+
+    def submit_rank(self, h, r, t) -> QueryRequest:
+        """Queue a filtered-rank query batch; returns immediately."""
+        tv = self._active
+        h = check_id_range("head entity", h, self.model.num_entities)
+        t = check_id_range("tail entity", t, self.model.num_entities)
+        r = check_id_range("relation", r, self.model.num_relations)
+        tv.check_finite("entity", tv.ent_bad, h)
+        tv.check_finite("relation", tv.rel_bad, r)
+        rid = self._next_rid
+        self._next_rid += 1
+        return self._submit(QueryRequest(rid, "rank", h, r, t))
+
+    def submit_topk(self, h, r, *, k: int = 10) -> QueryRequest:
+        """Queue a top-k candidate query batch; returns immediately."""
+        tv = self._active
+        h = check_id_range("head entity", h, self.model.num_entities)
+        r = check_id_range("relation", r, self.model.num_relations)
+        if not 1 <= k <= self.model.num_entities:
+            raise ValueError(
+                f"k must be in [1, {self.model.num_entities}], got {k}"
+            )
+        tv.check_finite("entity", tv.ent_bad, h)
+        tv.check_finite("relation", tv.rel_bad, r)
+        rid = self._next_rid
+        self._next_rid += 1
+        return self._submit(QueryRequest(rid, "topk", h, r, k=int(k)))
+
+    # ------------------------------------------------------ admission loop
+    def _coalesce(self) -> List[QueryRequest]:
+        """Pop the FIFO head's batchable prefix: same kind (and same top-k
+        bucket), up to ``max_batch`` query rows. ``direct`` mode takes one
+        request — the per-call baseline."""
+        head = self.queue[0]
+        take = [self.queue.popleft()]
+        if self.serve_impl == "direct":
+            return take
+        rows = len(head.h)
+        kb = _pow2_at_least(head.k) if head.kind == "topk" else 0
+        while self.queue and rows < self.max_batch:
+            nxt = self.queue[0]
+            if nxt.kind != head.kind:
+                break
+            if head.kind == "topk" and _pow2_at_least(nxt.k) != kb:
+                break
+            if rows + len(nxt.h) > self.max_batch:
+                break
+            take.append(self.queue.popleft())
+            rows += len(nxt.h)
+        return take
+
+    def _pad(self, arrs: List[np.ndarray], nq: int) -> List[np.ndarray]:
+        """Pad batch extent to a pow-2 bucket by repeating row 0 — padded
+        rows compute (and are discarded), keeping the compiled-program set
+        fixed across every traffic mix."""
+        nb = _pow2_at_least(nq, self.min_bucket if self.serve_impl == "batched"
+                            else 1)
+        if nb == nq:
+            return arrs
+        self.stats["padded_rows"] += nb - nq
+        return [
+            np.concatenate([a, np.repeat(a[:1], nb - nq, axis=0)], axis=0)
+            for a in arrs
+        ]
+
+    def _pick_replica(self) -> Replica:
+        return min(self.replicas, key=lambda rp: (rp.inflight, rp.slot))
+
+    def _dispatch(self, reqs: List[QueryRequest]) -> None:
+        tv = self._active  # ONE read: the batch is pinned to this version
+        kind = reqs[0].kind
+        h = np.concatenate([q.h for q in reqs])
+        r = np.concatenate([q.r for q in reqs])
+        nq = len(h)
+        segs, off = [], 0
+        for q in reqs:
+            segs.append((q, off, len(q.h)))
+            off += len(q.h)
+        rep = self._pick_replica()
+        ptab = tv.on(rep.device)
+        if kind == "rank":
+            t = np.concatenate([q.t for q in reqs])
+            filt = np.concatenate(
+                [t[:, None].astype(np.int32), self.filters.rows_for(h, r)],
+                axis=1,
+            )
+            h, r, t, filt = self._pad([h, r, t, filt], nq)
+            dh, dr, dt, df = jax.device_put((h, r, t, filt), rep.device)
+            counts = side_counts_dispatch(
+                ptab, self.model, dh, dr, dt, df, side="tail",
+                block_e=self.block_e, impl=self.rank_impl,
+            )
+            out: Tuple = (counts,)
+        else:
+            from repro.serving.engine import (
+                _streaming_topk_decomposed,
+                _streaming_topk_generic,
+            )
+
+            kb = min(_pow2_at_least(reqs[0].k), self.model.num_entities)
+            filt = self.filters.rows_for(h, r)
+            h, r, filt = self._pad([h, r, filt], nq)
+            dh, dr, df = jax.device_put((h, r, filt), rep.device)
+            qd = lp_query_tails(ptab, self.model, dh, dr)
+            if qd is not None:
+                q, table, mode = qd
+                vals, ids = _streaming_topk_decomposed(
+                    q, table, df, k=kb, block_e=self.block_e, mode=mode
+                )
+            else:
+                vals, ids = _streaming_topk_generic(
+                    ptab, self.model, dh, dr, df, k=kb, block_e=self.block_e
+                )
+            out = (vals, ids)
+        rep.inflight += 1
+        rep.dispatched += 1
+        self.stats["batches"] += 1
+        self.inflight.append(_InFlight(kind, out, segs, nq, tv, rep))
+
+    # ------------------------------------------------------------- collect
+    def _finish_batch(self, b: _InFlight) -> None:
+        b.replica.inflight -= 1
+        try:
+            host = [np.asarray(x) for x in b.out]
+        except Exception as ex:  # device-side failure: isolate to this batch
+            now = time.perf_counter()
+            for q, _, _ in b.segs:
+                q.error, q.done, q.finished_at = ex, True, now
+            self.stats["failed"] += len(b.segs)
+            return
+        now = time.perf_counter()
+        for q, off, n in b.segs:
+            if b.kind == "rank":
+                q.result = host[0][off:off + n] + 1
+            else:
+                vals, ids = host
+                q.result = (ids[off:off + n, :q.k], vals[off:off + n, :q.k])
+            q.version = b.tv.version
+            q.finished_at = now
+            q.done = True
+        self.stats["served"] += len(b.segs)
+
+    def _reap(self, *, block: bool = False) -> int:
+        """Collect completed batches; with ``block`` wait for the oldest
+        (the admission loop calls this when the dispatch-ahead window is
+        full), then keep draining whatever else already finished."""
+        done = 0
+        while self.inflight:
+            if not block and not self.inflight[0].ready():
+                break
+            block = False
+            b = self.inflight.popleft()
+            self._finish_batch(b)
+            done += len(b.segs)
+        return done
+
+    # -------------------------------------------------------- driving loop
+    def step(self) -> int:
+        """One admission-loop tick: collect finished batches, then dispatch
+        (at most) one coalesced batch. Returns the query rows dispatched."""
+        self._reap()
+        if not self.queue:
+            return 0
+        while len(self.inflight) >= self.max_inflight:
+            self._reap(block=True)
+        reqs = self._coalesce()
+        nq = sum(len(q.h) for q in reqs)
+        self._dispatch(reqs)
+        return nq
+
+    def run_until_drained(self, *, max_steps: int = 1_000_000) -> None:
+        for _ in range(max_steps):
+            if not self.queue and not self.inflight:
+                return
+            if self.queue:
+                self.step()
+            else:
+                self._reap(block=True)
+        raise RuntimeError("serving tier failed to drain")
+
+    # ------------------------------------------------------- observability
+    def replica_load(self) -> List[Tuple[int, int]]:
+        """[(slot, lifetime batches)] — the routing spread."""
+        return [(rp.slot, rp.dispatched) for rp in self.replicas]
+
+
+def serving_program_cache_size() -> int:
+    """Number of compiled serving-program specializations (rank counts +
+    both top-k variants). The retrace-pin test asserts this stays flat
+    across steady-state traffic of ANY mix of batch sizes within the
+    bucket set — continuous batching is only a win if padded buckets
+    actually stop recompilation."""
+    from repro.kge.eval import _side_counts_jit
+    from repro.serving.engine import (
+        _streaming_topk_decomposed,
+        _streaming_topk_generic,
+    )
+
+    return sum(
+        p._cache_size()
+        for p in (_side_counts_jit, _streaming_topk_decomposed,
+                  _streaming_topk_generic)
+    )

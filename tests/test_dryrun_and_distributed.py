@@ -257,6 +257,22 @@ def test_chunk_extents_pow2_decomposition():
         assert len(seen) <= int(math.log2(d)) + 2, (d, seen)
 
 
+def test_replica_devices_ring():
+    """The serving tier's replica ring: consecutive devices from the home
+    slot, wrapping, clamped to the mesh — replica 0 is always the owner's
+    sticky home device."""
+    import pytest
+    from repro.core.distributed import replica_devices
+
+    devs = list("abcdef")  # any sequence works; only indexing is used
+    assert replica_devices(0, 3, devs) == ["a", "b", "c"]
+    assert replica_devices(4, 3, devs) == ["e", "f", "a"]   # wraps
+    assert replica_devices(2, 99, devs) == ["c", "d", "e", "f", "a", "b"]
+    assert replica_devices(0, 2, ["x"]) == ["x"]            # clamps
+    with pytest.raises(ValueError, match=">= 1"):
+        replica_devices(0, 0, devs)
+
+
 def test_assemble_disassemble_group_zero_copy():
     """Group operands are built from per-device resident shards and split
     back into per-device shards — values round-trip exactly and every result

@@ -1,11 +1,29 @@
-"""Serving engine: continuous batching correctness + slot recycling."""
+"""Serving: token-engine continuous batching + the KGE serving tier.
+
+KGE coverage: ranker rank parity vs the seed reference math, top-k filter
+exclusion, request validation (range + non-finite bitmask), version swap,
+tier batching bit-parity vs per-call, program-cache pinning across traffic
+mixes, replica routing, and the version hot-swap boundary (manual publish
+and a federation-tick flip) — zero failed requests, ranks bit-equal per
+version."""
+import itertools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_config, reduced
+from repro.kernels.dispatch import resolve_serve_impl, resolve_serve_replicas
+from repro.kge.models import KGEModel, score_all_tails
+from repro.kge.trainer import init_kge
 from repro.models.model import decode_step, init_cache, init_params, prefill
+from repro.serving import (
+    FilterPack,
+    KGECandidateRanker,
+    KGEServingTier,
+    serving_program_cache_size,
+)
 from repro.serving.engine import ServingEngine
 
 
@@ -52,3 +70,299 @@ def test_slots_recycled(setup):
     done = eng.run_until_drained()
     assert len(done) == 3
     assert all(len(r.generated) == 3 for r in done)
+
+
+# ---------------------------------------------------------------------------
+# KGE candidate ranker + serving tier
+# ---------------------------------------------------------------------------
+E, R, D = 300, 6, 16
+
+
+def _tri(n, seed):
+    rng = np.random.default_rng(seed)
+    return np.stack(
+        [rng.integers(0, E, n), rng.integers(0, R, n), rng.integers(0, E, n)],
+        axis=1,
+    ).astype(np.int64)
+
+
+@pytest.fixture(scope="module")
+def kge_world():
+    m = KGEModel("transe", E, R, D)
+    params = init_kge(jax.random.PRNGKey(1), m)
+    known = _tri(400, seed=100)
+    return m, params, known
+
+
+def _ref_tail_ranks(params, m, known, h, r, t):
+    """Seed-style oracle: dense (B, E) scores + per-row Python filtering."""
+    from repro.kge.eval import _filter_mask
+
+    hr_t, _ = _filter_mask(known, m.num_entities)
+    dense = np.asarray(
+        score_all_tails(params, m, jnp.asarray(h), jnp.asarray(r), via_kernel=False)
+    )
+    ranks = []
+    for j in range(len(h)):
+        row = dense[j].copy()
+        for other in hr_t.get((int(h[j]), int(r[j])), ()):
+            if other != int(t[j]):
+                row[other] = -np.inf
+        ranks.append(1 + int((row > row[int(t[j])]).sum()))
+    return np.asarray(ranks)
+
+
+def test_ranker_rank_parity_vs_reference(kge_world):
+    m, params, known = kge_world
+    q = _tri(24, seed=2)
+    ranker = KGECandidateRanker(params, m, known, block_e=64)
+    got = ranker.rank_tails(q[:, 0], q[:, 1], q[:, 2])
+    np.testing.assert_array_equal(
+        got, _ref_tail_ranks(params, m, known, q[:, 0], q[:, 1], q[:, 2])
+    )
+
+
+def test_ranker_topk_excludes_known_and_matches_bruteforce(kge_world):
+    m, params, known = kge_world
+    # query keys that certainly have known tails
+    q = known[:10]
+    ranker = KGECandidateRanker(params, m, known, block_e=64)
+    ids, scores = ranker.topk_tails(q[:, 0], q[:, 1], k=7)
+    dense = np.asarray(
+        score_all_tails(params, m, jnp.asarray(q[:, 0]), jnp.asarray(q[:, 1]),
+                        via_kernel=False)
+    )
+    for j in range(len(q)):
+        row = dense[j].copy()
+        key = (int(q[j, 0]), int(q[j, 1]))
+        for t in ranker._hr_t.get(key, ()):
+            row[t] = -np.inf
+        expect = np.argsort(-row, kind="stable")[:7]
+        assert not (set(ids[j].tolist()) & ranker._hr_t.get(key, set()))
+        np.testing.assert_allclose(row[expect], scores[j], rtol=1e-6, atol=1e-6)
+
+
+def test_filter_pack_pow2_width_and_sentinel(kge_world):
+    m, _, known = kge_world
+    pack = FilterPack(known, m.num_entities)
+    assert pack.width & (pack.width - 1) == 0  # power of two
+    assert pack.rows.shape[1] == pack.width
+    # unknown key → sentinel row, all −1 (no exclusions)
+    rows = pack.rows_for(np.array([0]), np.array([R - 1]))
+    if (0, R - 1) not in pack.hr_t:
+        assert (rows == -1).all()
+    # pinned width refuses to silently truncate
+    from repro.kge.eval import pack_padded_filters
+
+    with pytest.raises(ValueError, match="exceeds width"):
+        pack_padded_filters([[1, 2, 3]], width=2)
+
+
+def test_ranker_swap_matches_fresh_ranker(kge_world):
+    m, params, known = kge_world
+    p2 = init_kge(jax.random.PRNGKey(9), m)
+    q = _tri(8, seed=3)
+    ranker = KGECandidateRanker(params, m, known, block_e=64)
+    before = ranker.rank_tails(q[:, 0], q[:, 1], q[:, 2])
+    ranker.swap(p2)
+    assert ranker.version == 1
+    after = ranker.rank_tails(q[:, 0], q[:, 1], q[:, 2])
+    fresh = KGECandidateRanker(p2, m, known, block_e=64)
+    np.testing.assert_array_equal(after, fresh.rank_tails(q[:, 0], q[:, 1], q[:, 2]))
+    # swap back restores the original ranks bit-exactly
+    ranker.swap(params)
+    np.testing.assert_array_equal(
+        before, ranker.rank_tails(q[:, 0], q[:, 1], q[:, 2])
+    )
+
+
+def test_tier_validation_and_nonfinite_bitmask(kge_world):
+    m, params, _ = kge_world
+    bad = {k: np.asarray(v).copy() for k, v in params.items()}
+    bad["ent"][3, 0] = np.nan
+    bad["rel"][1, 2] = np.inf
+    tier = KGEServingTier(bad, m, None, block_e=64)
+    with pytest.raises(ValueError, match=r"head entity ids .*\[-1\]"):
+        tier.submit_rank([-1], [0], [1])
+    with pytest.raises(ValueError, match=rf"tail entity ids .*\[{E}\]"):
+        tier.submit_rank([0], [0], [E])
+    with pytest.raises(ValueError, match=r"non-finite query embedding: entity ids \[3\]"):
+        tier.submit_rank([3], [0], [1])
+    with pytest.raises(ValueError, match=r"relation ids \[1\]"):
+        tier.submit_topk([0], [1], k=3)
+    with pytest.raises(ValueError, match="k must be in"):
+        tier.submit_topk([0], [0], k=0)
+    # publishing a repaired version clears the refusal — masks are per-version
+    tier.publish(params)
+    req = tier.submit_rank([3], [0], [1])
+    tier.run_until_drained()
+    assert req.done and req.error is None
+
+
+def test_tier_batched_parity_mixed_traffic(kge_world):
+    m, params, known = kge_world
+    ranker = KGECandidateRanker(params, m, known, block_e=64)
+    tier = KGEServingTier(params, m, known, block_e=64, max_batch=16)
+    rank_reqs, topk_reqs = [], []
+    for i, n in enumerate((3, 5, 2, 7, 1, 4)):
+        q = _tri(n, seed=10 + i)
+        rank_reqs.append((q, tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])))
+    for i, n in enumerate((2, 3)):
+        q = _tri(n, seed=20 + i)
+        topk_reqs.append((q, tier.submit_topk(q[:, 0], q[:, 1], k=5)))
+    tier.run_until_drained()
+    assert tier.stats["failed"] == 0
+    # coalescing actually happened: fewer batches than requests
+    assert tier.stats["batches"] < len(rank_reqs) + len(topk_reqs)
+    for q, req in rank_reqs:
+        np.testing.assert_array_equal(
+            req.result, ranker.rank_tails(q[:, 0], q[:, 1], q[:, 2])
+        )
+    for q, req in topk_reqs:
+        ids, vals = ranker.topk_tails(q[:, 0], q[:, 1], k=5)
+        np.testing.assert_array_equal(req.result[0], ids)
+        np.testing.assert_allclose(req.result[1], vals, rtol=0, atol=0)
+
+
+def test_tier_direct_impl_is_per_request(kge_world):
+    m, params, known = kge_world
+    tier = KGEServingTier(params, m, known, block_e=64, serve_impl="direct")
+    ranker = KGECandidateRanker(params, m, known, block_e=64)
+    qs = [_tri(n, seed=30 + n) for n in (2, 3, 4)]
+    reqs = [tier.submit_rank(q[:, 0], q[:, 1], q[:, 2]) for q in qs]
+    tier.run_until_drained()
+    assert tier.stats["batches"] == len(reqs)  # no coalescing
+    for q, req in zip(qs, reqs):
+        np.testing.assert_array_equal(
+            req.result, ranker.rank_tails(q[:, 0], q[:, 1], q[:, 2])
+        )
+
+
+def test_tier_program_cache_pinned_across_traffic_mixes(kge_world):
+    m, params, known = kge_world
+    tier = KGEServingTier(params, m, known, block_e=64, max_batch=16)
+    # warm every bucket the tier can emit for this traffic envelope
+    for i, n in enumerate((1, 3, 8, 16, 11)):
+        q = _tri(n, seed=40 + i)
+        tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    for i, n in enumerate((2, 5)):
+        q = _tri(n, seed=50 + i)
+        tier.submit_topk(q[:, 0], q[:, 1], k=5)
+    tier.run_until_drained()
+    warm = serving_program_cache_size()
+    # a different mix of sizes within the same bucket envelope (rank batches
+    # pad to 16, topk batches to 8) must not retrace
+    for i, n in enumerate((2, 7, 13, 1, 16, 4, 9)):
+        q = _tri(n, seed=60 + i)
+        tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    for i, n in enumerate((1, 4, 2)):
+        q = _tri(n, seed=70 + i)
+        tier.submit_topk(q[:, 0], q[:, 1], k=5)
+    tier.run_until_drained()
+    assert serving_program_cache_size() == warm
+    assert tier.stats["failed"] == 0
+
+
+def test_tier_replica_routing_least_loaded(kge_world, monkeypatch):
+    from repro.serving import tier as tier_mod
+
+    m, params, known = kge_world
+    dev = jax.devices()[0]
+    # two replica slots (same physical device on 1-device CI): the router
+    # must still spread consecutive batches by in-flight count
+    tier = KGEServingTier(params, m, known, block_e=64, replicas=2,
+                          devices=[dev, dev], max_batch=4, max_inflight=4)
+    # freeze completion: CPU batches finish between steps, so without this
+    # the in-flight gauge drains and the routing decision is timing-luck
+    monkeypatch.setattr(tier_mod._InFlight, "ready", lambda self: False)
+    for i in range(4):
+        q = _tri(4, seed=80 + i)
+        tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+        tier.step()
+    assert [rp.inflight for rp in tier.replicas] == [2, 2]
+    monkeypatch.undo()
+    tier.run_until_drained()
+    assert dict(tier.replica_load()) == {0: 2, 1: 2}
+    assert tier.stats["failed"] == 0
+
+
+def test_tier_hot_swap_boundary_bit_equal(kge_world):
+    m, params, known = kge_world
+    p2 = init_kge(jax.random.PRNGKey(11), m)
+    tier = KGEServingTier(params, m, known, block_e=64, max_batch=8)
+    q = _tri(6, seed=90)
+    # dispatch A before the flip (in-flight on v0), then publish, then B
+    a = tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    tier.step()
+    tier.publish(p2)
+    b = tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    tier.run_until_drained()
+    assert tier.stats["failed"] == 0
+    assert (a.version, b.version) == (0, 1)
+    r1 = KGECandidateRanker(params, m, known, block_e=64)
+    r2 = KGECandidateRanker(p2, m, known, block_e=64)
+    np.testing.assert_array_equal(a.result, r1.rank_tails(q[:, 0], q[:, 1], q[:, 2]))
+    np.testing.assert_array_equal(b.result, r2.rank_tails(q[:, 0], q[:, 1], q[:, 2]))
+
+
+def test_federation_tick_version_flip_serves_bit_equal():
+    """The acceptance bar: a tier attached to a federating owner hot-swaps
+    on every accepted tick update with ZERO failed requests, and ranks
+    served after the flip are bit-equal to a per-call ranker on the
+    owner's accepted params."""
+    from repro.core.federation import FederationScheduler
+    from repro.core.ppat import PPATConfig
+    from repro.kge.data import synthesize_universe
+
+    kgs = synthesize_universe(
+        seed=1, scale=1 / 500,
+        kg_stats=[("A", 12, 90000, 300000), ("B", 10, 70000, 250000)],
+        alignments=[("A", "B", 30000)],
+    )
+    ctr = itertools.count()
+    # monotone score ⇒ every handshake/self-train is accepted: the flip is
+    # deterministic, not at the mercy of tiny-universe training dynamics
+    sched = FederationScheduler(
+        kgs, dim=16, ppat_cfg=PPATConfig(steps=5, seed=0),
+        local_epochs=2, update_epochs=2, seed=0,
+        score_fn=lambda name: float(next(ctr)),
+    )
+    sched.initial_training()
+    tier = KGEServingTier.for_owner(sched, "A", block_e=64, max_batch=16)
+    v0 = tier.version
+    q = np.asarray(kgs["A"].test)[:6]
+    pre = tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    tier.step()  # dispatched before any tick → pinned to v0
+    sched.run(max_ticks=2)
+    post = tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    tier.run_until_drained()
+    accepts = sum(
+        1 for e in sched.events
+        if e.accepted and e.host == "A" and e.kind != "init"
+    )
+    assert accepts >= 1
+    assert tier.version == v0 + accepts  # one publish per accepted update
+    assert tier.stats["failed"] == 0 and tier.stats["publish_errors"] == 0
+    assert (pre.version, post.version) == (v0, tier.version)
+    known = np.concatenate([kgs["A"].train, kgs["A"].valid, kgs["A"].test])
+    tr = sched.trainers["A"]
+    now = KGECandidateRanker(dict(tr.params), tr.model, known, block_e=64)
+    np.testing.assert_array_equal(
+        post.result, now.rank_tails(q[:, 0], q[:, 1], q[:, 2])
+    )
+    assert pre.result is not None and pre.error is None
+
+
+def test_resolve_serve_knobs(monkeypatch):
+    assert resolve_serve_impl() == "batched"
+    assert resolve_serve_impl("direct") == "direct"
+    monkeypatch.setenv("REPRO_SERVE_IMPL", "direct")
+    assert resolve_serve_impl() == "direct"
+    assert resolve_serve_impl("batched") == "batched"  # explicit wins
+    with pytest.raises(ValueError, match="unknown serve impl"):
+        resolve_serve_impl("turbo")
+    monkeypatch.setenv("REPRO_SERVE_REPLICAS", "3")
+    assert resolve_serve_replicas() == 3
+    assert resolve_serve_replicas(1) == 1  # explicit wins
+    with pytest.raises(ValueError, match="replicas must be >= 1"):
+        resolve_serve_replicas(0)
