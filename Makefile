@@ -1,13 +1,15 @@
 PY := PYTHONPATH=src python
 
 .PHONY: tier1 test check-hygiene lint bench-eval bench-train bench-tick \
-	bench-serve bench bench-json bench-smoke chaos-smoke attack-smoke
+	bench-serve bench bench-json bench-smoke chaos-smoke attack-smoke \
+	async-smoke
 
 # CI gate: repo hygiene + lint, the full suite, the engine parity tests
 # explicitly (they are the acceptance bars for the streaming fused-rank eval
 # engine, the device-resident training engine, and the batched federation
 # tick engine), then every bench suite at smoke extents so bench code paths
-# can't rot, the fault soak, and the Byzantine-storm gate.
+# can't rot, the fault soak, the Byzantine-storm gate, and the streamed-
+# scheduling gate.
 tier1: check-hygiene lint
 	$(PY) -m pytest -x -q
 	$(PY) -m pytest -q tests/test_eval_engine.py -k "parity"
@@ -16,6 +18,7 @@ tier1: check-hygiene lint
 	$(MAKE) bench-smoke
 	$(MAKE) chaos-smoke
 	$(MAKE) attack-smoke
+	$(MAKE) async-smoke
 
 # ruff when available, pyflakes as second choice, stdlib-ast fallback
 # otherwise (this container ships neither) — unused/duplicate imports fail
@@ -46,6 +49,14 @@ chaos-smoke:
 # quarantine machinery engages.
 attack-smoke:
 	PYTHONPATH=src:. python benchmarks/attack_smoke.py
+
+# streamed-scheduling gate: 8-owner ring with tick_sync="stream" under a
+# pinned straggler + random crashes — asserts the mesh keeps finishing work
+# (simulated time) while the straggler blocks, nobody starves, and the run
+# drains deferred/quarantined work at quiescence. 8 forced host devices so
+# dependency levels dispatch against a real multi-device mesh.
+async-smoke:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" PYTHONPATH=src:. python benchmarks/async_smoke.py
 
 # fail if generated artifacts (bytecode, pytest caches) are ever tracked
 # again — PR 3 accidentally shipped 12 __pycache__/*.pyc files

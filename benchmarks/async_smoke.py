@@ -1,0 +1,152 @@
+"""Tier-1 async gate: streamed scheduling under a straggler + crash storm.
+
+Drives an 8-owner ring federation with ``tick_sync="stream"`` through a
+combined storm — one pinned slow owner (a simulated per-entry delay far
+beyond anything the mesh should wait for) plus seeded random crashes for
+the first ticks, then a clean tail — and asserts the asynchronous-
+scheduling contract at quiescence:
+
+  * **no stall**: owners outside the straggler's alignment neighborhood
+    finish (in simulated time) without ever inheriting the straggler's
+    delay — under the lockstep barrier every owner would, which is the
+    difference this gate pins;
+  * **no starvation**: every owner — the straggler included — hosts work
+    and advances its per-owner logical clock despite the storm;
+  * **streaming actually streamed**: dependency levels past level 0 were
+    cut and executed, and accepted events carry advancing view versions;
+  * **quiescence drains**: deferred retries and quarantines empty, no
+    owner is left ``BUSY``/``QUARANTINED``, and the run quiesces before
+    the tick cap;
+  * it still converges: the backtrack invariant holds and PPAT exchanges
+    were accepted through the chaos.
+
+Runs in a handful of seconds on CPU CI (``make async-smoke``, wired into
+``make tier1``; the Makefile forces 8 host devices so the streamed levels
+dispatch against a real multi-device mesh). Pass/fail gate, not a
+measurement — deliberately NOT registered in ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro.core.faults import Fault, FaultPlan
+from repro.core.federation import FederationScheduler, NodeState
+from repro.core.ppat import PPATConfig
+from repro.kge.data import synthesize_universe
+
+#: the slow owner's simulated per-entry delay — absurdly large on purpose:
+#: any fast owner whose simulated finish stays below this provably never
+#: waited on the straggler's chain
+DELAY = 1e6
+
+
+def storm_plan(host: str, *, storm_ticks: int = 3) -> FaultPlan:
+    """Pinned straggles on ``host`` (every entry it hosts, first
+    ``storm_ticks`` ticks) layered over seeded random crashes elsewhere.
+    The pinned table wins for the slow owner's entries; every other draw
+    falls through to the crash rate."""
+    table = {
+        (t, host): Fault("straggle", delay=DELAY)
+        for t in range(1, storm_ticks + 1)
+    }
+    return FaultPlan(crash=0.25, seed=7, until=storm_ticks, table=table)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--owners", type=int, default=8)
+    ap.add_argument("--max-ticks", type=int, default=24)
+    ap.add_argument("--staleness-bound", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    n = args.owners
+    slow = "O0"
+    stats = [(f"O{i}", 6, 40000, 120000) for i in range(n)]
+    aligns = [(f"O{i}", f"O{(i + 1) % n}", 12000) for i in range(n)]
+    uni = synthesize_universe(
+        seed=3, scale=1 / 1000, kg_stats=stats, alignments=aligns
+    )
+    fed = FederationScheduler(
+        uni, dim=16, ppat_cfg=PPATConfig(steps=3, seed=0),
+        local_epochs=2, update_epochs=1, seed=0,
+        tick_faults=storm_plan(slow),
+        retry_budget=2, backoff_ticks=1, quarantine_ticks=2,
+    )
+    inits = fed.initial_training()
+    t0 = time.perf_counter()
+    fed.run(
+        max_ticks=args.max_ticks, tick_sync="stream",
+        staleness_bound=args.staleness_bound,
+    )
+    wall = time.perf_counter() - t0
+
+    faults = [e.fault for e in fed.events if e.fault]
+    kinds = sorted(set(faults))
+    sims = fed.sim_times()
+    hosts = {e.host for e in fed.events if e.host in uni}
+    # entries that FINISHED (simulated) before the straggler's first slow
+    # entry could have: under the lockstep barrier this set is empty — the
+    # very first tick synchronizes every owner behind the 1e6 s straggle
+    early = [
+        e for e in fed.events
+        if 0.0 < e.sim_finish < DELAY and e.fault is None
+    ]
+    checks = [
+        ("crash" in kinds,
+         f"storm too quiet — crashes never fired, saw {kinds}"),
+        (sims.get(slow, 0.0) >= DELAY,
+         f"the pinned straggle never landed: sim({slow})="
+         f"{sims.get(slow, 0.0):.3g}s"),
+        # no stall: the mesh kept finishing work while the straggler
+        # blocked — a barrier run would leave `early` EMPTY
+        (len(early) > n,
+         f"mesh stalled behind the straggler: only {len(early)} entries "
+         f"finished before its chain"),
+        # no starvation: the mesh serviced everyone, slow owner included
+        (hosts == set(uni),
+         f"owners never serviced: {sorted(set(uni) - hosts)}"),
+        (all(fed._owner_clock.get(o, 0) > 0 for o in uni),
+         f"stuck per-owner clocks: {fed._owner_clock}"),
+        # streaming actually streamed: levels past 0 were cut, and view
+        # versions advanced on the events that consumed them
+        (any(e.level > 0 for e in fed.events),
+         "no dependency level past 0 — the plan never actually streamed"),
+        (max((e.view_version for e in fed.events), default=0) > 0,
+         "view versions never advanced on any event"),
+        (all(s in (NodeState.READY, NodeState.SLEEP)
+             for s in fed.state.values()),
+         "leaked transient state at quiescence: "
+         + str({m: s.value for m, s in fed.state.items()})),
+        (not fed._deferred,
+         f"deferred retries stranded: {fed._deferred}"),
+        (not fed._quarantine_until,
+         f"quarantine never released: {fed._quarantine_until}"),
+        (fed._tick < args.max_ticks,
+         f"did not quiesce before the tick cap ({fed._tick})"),
+        (all(fed.best_score[m] >= inits[m] for m in uni),
+         "backtrack invariant violated: best score regressed"),
+        (any(e.accepted and e.kind == "ppat" for e in fed.events),
+         "no PPAT exchange accepted — federation made no progress"),
+    ]
+    failures = [msg for ok, msg in checks if not ok]
+    print(
+        f"async-smoke: N={n} passes={fed._tick} wall={wall:.1f}s "
+        f"faults={len(faults)} kinds={kinds} "
+        f"stale={sum(1 for e in fed.events if e.fault == 'stale')} "
+        f"levels={max((e.level for e in fed.events), default=0) + 1} "
+        f"accepted={sum(1 for e in fed.events if e.accepted)} "
+        f"early={len(early)} slow_sim={sims.get(slow, 0.0):.3g}s"
+    )
+    for msg in failures:
+        print(f"async-smoke FAIL: {msg}", file=sys.stderr)
+    if failures:
+        return 1
+    print("async-smoke: PASS — streamed past the straggler, no starvation, "
+          "drained at quiescence")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

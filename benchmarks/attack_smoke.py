@@ -62,8 +62,12 @@ def _score(fed) -> float:
 
 
 def _events_key(fed):
+    # level / owner_clock / view_version ride in the parity key: the
+    # engines must agree on the streaming-scheduler stamps too, not just
+    # the protocol decisions
     return [
-        (e.tick, e.host, e.client, e.kind, e.fault, e.attack, e.accepted)
+        (e.tick, e.host, e.client, e.kind, e.fault, e.attack, e.accepted,
+         e.level, e.owner_clock, e.view_version)
         for e in fed.events
     ]
 
@@ -126,6 +130,14 @@ def main() -> int:
          f"{scr._reputation}"),
         (any(e.accepted and e.kind == "ppat" for e in scr.events),
          "defended federation made no progress"),
+        # the barrier runs must stamp coherent streaming-scheduler fields:
+        # level 0 everywhere, clocks advancing, versions visible on accepts
+        (all(e.level == 0 for f in attacked_runs for e in f.events),
+         "barrier-mode events carry a nonzero dependency level"),
+        (all(e.owner_clock > 0 for f in attacked_runs for e in f.events),
+         "events with unstamped per-owner clocks"),
+        (max(e.view_version for e in scr.events) > 0,
+         "view versions never advanced across accepted exchanges"),
     ]
     failures = [msg for ok, msg in checks if not ok]
     print(

@@ -40,6 +40,21 @@ against the committed pre-fault-layer ``BENCH_federation_tick.json``
 baseline keys (``tick_engine.batched.N8.E10000`` etc.). The armed run is
 held to the same bit-parity contract — an inert injector must not perturb
 a single decision, score, ε, or embedding.
+A straggler-storm pair closes the run: one pinned slow owner
+(``FaultPlan.slow_owner``, simulated ``--straggle-delay`` seconds on every
+entry it hosts, no deadline — the owner is late, never failed) drives two
+fresh schedulers through the same storm, once under the lockstep barrier
+(``tick_sync="barrier"``) and once streamed (``tick_sync="stream"``, a
+staleness bound no draw can exceed, so both runs take bit-identical
+decisions and the comparison is work-for-work). The reported metric is the
+*simulated* fast-owner completion time (mean over the non-straggler
+owners, from the scheduler's simulated-time accounting): under the barrier
+every owner inherits the straggler's delay every tick, while the streamed
+scheduler lets disjoint owner groups advance and only the entries that
+actually consume the straggler's published views wait for them.
+``tick_engine.straggler_speedup`` is asserted > 1.2 whenever ≥ 4 owners
+run (at 2 owners every handshake touches the straggler and there is
+nothing to stream past).
 Under ``REPRO_BENCH_SMOKE`` (``make bench-smoke``) the defaults shrink to
 N=2 owners / E=800 so the whole path — parity asserts included — runs as a
 tier-1 gate.
@@ -102,6 +117,34 @@ def _assert_parity(ref, bat) -> None:
             ), f"{n}.{k} diverged between tick impls"
 
 
+def _assert_parity_streamed(bar, strm) -> None:
+    """Barrier vs streamed work-for-work parity: the streamed pass emits
+    the same events as the barrier tick in LEVEL order (a permutation of
+    plan order), so decisions are compared under a canonical sort; scores,
+    ε, best scores, and final embeddings must still match bitwise."""
+    def keyed(fed):
+        return sorted(
+            ((e.tick, e.host, e.client or "", e.kind, e.accepted,
+              e.score_before, e.score_after, e.epsilon)
+             for e in fed.events),
+            key=lambda t: t[:4],
+        )
+
+    a, b = keyed(bar), keyed(strm)
+    assert len(a) == len(b)
+    for r, s in zip(a, b):
+        assert r[:5] == s[:5], (r, s)
+        assert r[5] == s[5] and r[6] == s[6], (r, s)
+        assert (math.isnan(r[7]) and math.isnan(s[7])) or r[7] == s[7], (r, s)
+    assert bar.best_score == strm.best_score
+    for n in bar.trainers:
+        for k in bar.trainers[n].params:
+            assert np.array_equal(
+                np.asarray(bar.trainers[n].params[k]),
+                np.asarray(strm.trainers[n].params[k]),
+            ), f"{n}.{k} diverged between barrier and streamed scheduling"
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--csv", default=None, help="also append rows to this file")
@@ -119,6 +162,10 @@ def main(argv=None) -> None:
     ap.add_argument("--warm-ticks", type=int, default=pick(8, 2))
     ap.add_argument("--ticks", type=int, default=pick(2, 1),
                     help="timed ticks per impl")
+    ap.add_argument("--straggle-ticks", type=int, default=pick(6, 2),
+                    help="storm length for the one-slow-owner scenario")
+    ap.add_argument("--straggle-delay", type=float, default=30.0,
+                    help="simulated seconds the slow owner adds per entry")
     args = ap.parse_args(argv)
 
     kgs = _build_universe(args.owners, args.entities, args.triples, args.aligned)
@@ -258,6 +305,63 @@ def main(argv=None) -> None:
          adv_overhead,
          f"defended-under-attack/off ratio={adv_overhead:.2f}x;{env['batched']}"),
     ]
+    # ---- straggler storm: one pinned slow owner, barrier vs streamed ----
+    # The injected delay is simulated (added to measured seconds, never
+    # slept), so this pair runs at full speed; the comparison lives in the
+    # schedulers' simulated-time accounting. A staleness bound no run can
+    # exceed keeps the streamed decisions bit-identical to the barrier's —
+    # asserted below — so the two rows time the exact same work.
+    from repro.core.faults import FaultPlan
+
+    storm = FaultPlan.slow_owner(
+        "K0", delay=args.straggle_delay, ticks=args.straggle_ticks
+    )
+    strag = {}
+    for sync in ("barrier", "stream"):
+        fed = _make(kgs, args)
+        fed.initial_training()
+        fed.run(
+            max_ticks=args.straggle_ticks, tick_impl="batched",
+            tick_placement="single", tick_faults=storm, tick_sync=sync,
+            staleness_bound=1_000_000,
+        )
+        strag[sync] = fed
+    _assert_parity_streamed(strag["barrier"], strag["stream"])
+
+    def _fast_mean(fed):
+        fast = [t for n, t in fed.sim_times().items() if n != "K0"]
+        return sum(fast) / max(len(fast), 1)
+
+    bar_fast = _fast_mean(strag["barrier"])
+    str_fast = _fast_mean(strag["stream"])
+    strag_speedup = bar_fast / str_fast if str_fast > 0 else float("inf")
+    if args.owners >= 4:
+        assert strag_speedup > 1.2, (
+            f"streamed scheduling must beat the barrier past a straggler "
+            f"({args.owners} owners, {args.owners - 1} fast): "
+            f"{bar_fast:.1f}s vs {str_fast:.1f}s"
+        )
+    strag_env = (
+        f"slow=K0 delay={args.straggle_delay:g}s "
+        f"ticks={args.straggle_ticks};D={ndev} placement=single"
+    )
+    rows += [
+        # value = simulated seconds (not µs): the injected delay dominates
+        # and real compute rides inside the same accounting for both modes
+        (f"tick_engine.straggler_barrier.N{args.owners}.E{args.entities}",
+         bar_fast,
+         f"fast-owner mean sim-seconds, lockstep barrier; "
+         f"makespan={strag['barrier'].sim_makespan():.1f}s;{strag_env}"),
+        (f"tick_engine.straggler_streamed.N{args.owners}.E{args.entities}",
+         str_fast,
+         f"fast-owner mean sim-seconds, dependency-level streaming; "
+         f"makespan={strag['stream'].sim_makespan():.1f}s;{strag_env}"),
+        (f"tick_engine.straggler_speedup.N{args.owners}.E{args.entities}",
+         strag_speedup,
+         f"barrier/streamed fast-owner ratio={strag_speedup:.1f}x "
+         f"parity=bitwise;{strag_env}"),
+    ]
+
     for name, us, derived in rows:
         emit(name, us, derived)
     if args.csv:

@@ -77,6 +77,13 @@ def main(argv=None) -> int:
          "backtrack invariant violated: best score regressed"),
         (any(e.accepted and e.kind == "ppat" for e in fed.events),
          "no PPAT exchange accepted — federation made no progress"),
+        # streaming-scheduler stamps stay coherent in barrier mode: every
+        # event at level 0, per-owner clocks advancing, and the view-
+        # version vector moving with accepted exchanges
+        (all(e.level == 0 and e.owner_clock > 0 for e in fed.events),
+         "barrier-mode events carry bad level/owner_clock stamps"),
+        (max(e.view_version for e in fed.events) > 0,
+         "view versions never advanced despite accepted exchanges"),
     ]
     failures = [msg for ok, msg in checks if not ok]
     print(

@@ -9,8 +9,11 @@ federation resume: everything the scheduler's decisions depend on — queues,
 node states, the tick counter, best scores, every RNG stream (the
 scheduler's PPAT key, each trainer's engine key and numpy generator), the
 moments accountant, retry/backoff/quarantine bookkeeping, sticky owner
-placement, and the accepted embedding tables — round-trips exactly, so a
-process killed between ticks resumes with bit-identical decisions. Device
+placement, the streaming scheduler's per-owner clocks and view-version
+vector, and the accepted embedding tables — round-trips exactly, so a
+process killed between ticks (or between streamed passes — passes complete
+atomically, so the streaming frontier is empty at every save point)
+resumes with bit-identical decisions. Device
 residency is deliberately NOT persisted: restored tables land on the
 default device and the per-device resident caches repopulate lazily on the
 first post-resume tick (visible as ``TickEngine.resident_transfers``
@@ -142,6 +145,27 @@ def save_scheduler(path: str, sched, *, metadata: Optional[Dict] = None) -> None
         "rng": {
             n: tr.rng.bit_generator.state for n, tr in sched.trainers.items()
         },
+        # streaming-scheduler state: per-owner logical clocks, the
+        # view-version vector the bounded-staleness gate compares against,
+        # and the simulated-time accounting (floats round-trip exactly
+        # through JSON repr). The streaming frontier itself is ALWAYS empty
+        # at a save point — passes complete atomically and the BUSY guard
+        # above forbids mid-pass cuts — so cross-pass re-offers live in the
+        # ordinary queue/deferred state already serialized.
+        "stream": {
+            "owner_clock": {
+                n: int(v) for n, v in sched._owner_clock.items()
+            },
+            "view_version": {
+                n: int(v) for n, v in sched._view_version.items()
+            },
+            "owner_free": {
+                n: float(v) for n, v in sched._owner_free.items()
+            },
+            "publish_sim": {
+                n: float(v) for n, v in sched._publish_sim.items()
+            },
+        },
     }
     save_checkpoint(path, _scheduler_tree(sched), metadata=meta)
 
@@ -213,6 +237,23 @@ def restore_scheduler(path: str, sched) -> Dict:
     sched._reputation = {
         k: float(v) for k, v in sd.get("reputation", {}).items()
     }
+    # streaming-scheduler state (absent in pre-stream checkpoints → fresh
+    # clocks, which matches those checkpoints' barrier-only history)
+    st = sd.get("stream", {})
+    sched._owner_clock = {
+        k: int(v) for k, v in st.get("owner_clock", {}).items()
+    }
+    sched._view_version = {
+        k: int(v) for k, v in st.get("view_version", {}).items()
+    }
+    sched._owner_free = {
+        k: float(v) for k, v in st.get("owner_free", {}).items()
+    }
+    sched._publish_sim = {
+        k: float(v) for k, v in st.get("publish_sim", {}).items()
+    }
+    for owner, version in sched._view_version.items():
+        sched._tick_engine.placement.note_version(owner, version)
     # replay-attack stale-view cache: resumed storms must re-ship the SAME
     # stale views the interrupted run cached
     if stale_shapes:

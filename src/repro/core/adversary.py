@@ -35,7 +35,14 @@ Determinism: ``AdversaryPlan.draw`` is a pure function of
 reproduce bit-identically across both tick engines and across checkpoint
 resume. The only adversary state is the replay cache, which is serialized
 by ``save_scheduler``/``restore_scheduler`` precisely so resumed storms
-replay the same stale views.
+replay the same stale views. Like the fault layer, the lockstep is
+PER-ENTRY, not per-tick: the streamed scheduler (``tick_sync="stream"``)
+executes a pass level by level and may tamper the same ``(tick, host,
+client)`` twice (a re-offer handshake re-freezes and re-tampers a fresh
+view), and because draws and directions are pure in those coordinates —
+and the replay cache keys on the (client, host) pair, not the tick — the
+storm a streamed pass sees is byte-identical across engines and
+scheduling disciplines.
 
 Resolution: ``kernels.dispatch.resolve_tick_adversary`` /
 ``REPRO_TICK_ADVERSARY`` / ``FederationScheduler(tick_adversary=...)``.

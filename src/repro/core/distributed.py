@@ -98,6 +98,11 @@ class OwnerPlacement:
             devices if devices is not None else jax.devices()
         )
         self._slot: Dict[str, int] = {}
+        #: latest published view version resident on each owner's home —
+        #: streamed federation keys residency by VERSION, not tick: once
+        #: owners desynchronize the global tick no longer says whether the
+        #: state on a device is current, the owner's version counter does
+        self._version: Dict[str, int] = {}
 
     def slot(self, owner: str) -> int:
         """The owner's sticky device index (== its preferred position in an
@@ -110,6 +115,16 @@ class OwnerPlacement:
 
     def device(self, owner: str):
         return self.devices[self.slot(owner)]
+
+    def note_version(self, owner: str, version: int) -> None:
+        """Record that ``owner``'s sticky home now holds its ``version``-th
+        accepted publish (called from every scheduler accept path)."""
+        self._version[owner] = int(version)
+
+    def version(self, owner: str) -> int:
+        """The owner's latest published view version resident on its home
+        (0 before any accept)."""
+        return self._version.get(owner, 0)
 
     def assignments(self) -> Dict[str, int]:
         return dict(self._slot)

@@ -35,7 +35,13 @@ Fault kinds (one per tick entry at most):
 Determinism: every draw is a pure function of ``(seed, tick, host, client)``
 — no injector state feeds back into the draw — so a scheduler resumed from a
 mid-run checkpoint sees exactly the faults the uninterrupted run would have
-seen, and two engines driving the same plan inject identically.
+seen, and two engines driving the same plan inject identically. The same
+purity is what makes the key-stream lockstep PER-ENTRY rather than per-tick:
+the streamed scheduler (``tick_sync="stream"``) executes a pass's entries
+level by level in a different order than the barrier loop, and a re-offered
+handshake executes twice in one pass — both re-draw the identical fault for
+their ``(tick, host, client)``, so storms are byte-identical across
+engines, scheduling disciplines, and resume points.
 
 Resolution: ``kernels.dispatch.resolve_tick_faults`` /
 ``REPRO_TICK_FAULTS`` / ``FederationScheduler(tick_faults=...)``. Default
@@ -154,6 +160,24 @@ class FaultPlan:
                 )
             lo = hi
         return None
+
+    # ------------------------------------------------------------ builders
+    @classmethod
+    def slow_owner(
+        cls, host: str, *, delay: float, ticks: int, first_tick: int = 1,
+    ) -> "FaultPlan":
+        """The straggler-storm scenario: one pinned slow owner. ``host``
+        draws a simulated-``delay`` straggle every time it hosts an entry
+        in ticks ``first_tick .. first_tick + ticks - 1``; every other
+        owner runs clean. With no ``tick_deadline`` configured the slow
+        results are still accepted — the owner is merely late, which is
+        exactly the case the streamed scheduler must not let stall the
+        mesh (and the barrier scheduler, by construction, does)."""
+        table = {
+            (t, host): Fault("straggle", delay=float(delay))
+            for t in range(first_tick, first_tick + ticks)
+        }
+        return cls(table=table)
 
     # ------------------------------------------------------------- parsing
     @classmethod

@@ -29,6 +29,29 @@ engines (``kernels.dispatch.resolve_tick_impl`` / ``REPRO_TICK_IMPL``):
   * ``reference`` — the serial per-owner loop below, kept as the parity
     oracle.
 
+**Scheduling discipline** (``kernels.dispatch.resolve_tick_sync`` /
+``REPRO_TICK_SYNC`` / ``tick_sync=``): ``barrier`` (default) runs the
+lockstep loop above — one plan, one barrier, accepts visible next tick.
+``stream`` runs the dependency-level streaming scheduler (``_run_stream``):
+each pass's frontier is cut into **dependency levels** (entries whose
+host/client sets overlap serialize; disjoint entries stream), levels
+dispatch into the chosen engine as they clear, and an accepted update can
+serve a later-level host in the same wall-clock pass. Client views are
+**versioned** (``_view_version``, bumped on every accept) and frozen at
+plan time; at each level's dispatch a bounded-staleness gate compares the
+frozen version against the client's current one — a view more than
+``staleness_bound`` versions stale triggers a **re-offer handshake** (the
+entry re-freezes a fresh view and executes in a trailing level of the same
+pass; still stale after one re-offer, the offer returns to the queue for
+the next pass) instead of a blind accept. Determinism is preserved by
+construction: execution order is the (deterministic) level structure, the
+scheduler PPAT key stream is pre-split in plan order (``key_ppat``), and
+fault/adversary draws stay keyed on ``(tick, host, client)`` — so both
+engines remain in bit-lockstep under streaming, and a streamed run whose
+staleness gate never fires is bit-identical to the barrier scheduler.
+Per-owner simulated-time accounting (``sim_times`` / ``sim_makespan``)
+is reporting-only: no decision reads it.
+
 This preserves the protocol semantics (pairing, queueing, backtracking,
 broadcast-wakeup) without real multi-process execution — see DESIGN.md §3.
 """
@@ -58,6 +81,7 @@ from repro.kernels.dispatch import (
     resolve_tick_adversary,
     resolve_tick_faults,
     resolve_tick_impl,
+    resolve_tick_sync,
 )
 from repro.kge.trainer import KGETrainer
 
@@ -96,6 +120,21 @@ class FederationEvent:
     #: audit trail: the injected adversarial attack kind ("drift" | "sybil"
     #: | "replay"), if an adversary tampered with this entry's client view
     attack: Optional[str] = None
+    #: dependency level the entry executed at (0 for every barrier-mode
+    #: entry; streamed passes number levels from 0)
+    level: int = 0
+    #: the host's per-owner logical clock after this entry — a monotone
+    #: count of entries the owner has hosted (init, handshake, self-train),
+    #: the per-owner notion of progress once owners desynchronize
+    owner_clock: int = 0
+    #: the client-view version this entry read (handshakes: the client's
+    #: published-version counter at view-freeze time; init/self-train: the
+    #: host's own published version at stamp time)
+    view_version: int = 0
+    #: simulated completion time under the active scheduling discipline's
+    #: time model (reporting only, 0.0 for unaccounted audit events) — the
+    #: async smoke gate counts events finishing before a straggler's chain
+    sim_finish: float = 0.0
 
 
 @dataclass
@@ -108,6 +147,20 @@ class TickEntry:
     kind: str  # "ppat" | "self-train"
     client: Optional[str] = None
     client_view: Optional[Dict[str, jnp.ndarray]] = None
+    #: the client's published-version counter at view-freeze time; the
+    #: streamed scheduler's bounded-staleness gate compares it against the
+    #: client's CURRENT version when the entry's level dispatches
+    view_version: int = 0
+    #: simulated publish time of the frozen view (streamed-mode reporting
+    #: only — a consumer of a fresh publish cannot start before it)
+    sim_wait: float = 0.0
+    #: pre-split scheduler PPAT key (streamed mode): assigned in plan order
+    #: at pass start so per-level execution consumes the key stream in
+    #: exactly the order the barrier scheduler would, no matter how the
+    #: level cut interleaves owners. ``None`` → the engines split at
+    #: execution time (the barrier path, bit-identical to the pre-stream
+    #: scheduler).
+    key_ppat: Optional[jnp.ndarray] = None
 
 
 class _ClientView:
@@ -180,6 +233,8 @@ class FederationScheduler:
         backoff_ticks: int = 1,
         quarantine_ticks: int = 4,
         tick_deadline: Optional[float] = None,
+        tick_sync: Optional[str] = None,
+        staleness_bound: int = 0,
     ):
         # score_split="test" reproduces Alg. 1 verbatim (the paper backtracks
         # on g_j.test); "valid" (default) is the leakage-free variant.
@@ -231,6 +286,20 @@ class FederationScheduler:
         self.backoff_ticks = backoff_ticks        # base of the exponential backoff
         self.quarantine_ticks = quarantine_ticks  # timed release horizon
         self.tick_deadline = tick_deadline        # per-entry straggler deadline (s)
+        # "auto" | "barrier" | "stream" (None → env/auto): the scheduling
+        # discipline — lockstep ticks (the parity oracle) or dependency-
+        # level streaming passes; resolved per run() like the other knobs
+        self.tick_sync = tick_sync
+        if staleness_bound < 0:
+            raise ValueError(f"staleness_bound={staleness_bound} must be >= 0")
+        #: streamed mode's bounded-staleness acceptance rule, in accepted-
+        #: version bumps: a frozen client view whose client has published
+        #: more than this many versions since the freeze is NOT blindly
+        #: used — the entry re-offers with a fresh view instead. 0 =
+        #: strictest (any same-pass publish forces a re-offer); a large
+        #: bound always uses the plan-frozen view, which makes the streamed
+        #: pass bit-identical to a barrier tick.
+        self.staleness_bound = staleness_bound
         self.kgs = kgs
         self.registry = registry or AlignmentRegistry.from_kgs(kgs)
         families = families or {n: "transe" for n in kgs}
@@ -301,6 +370,24 @@ class FederationScheduler:
         self._adversary = None         # cached resolved Adversary
         self._adversary_src = None
         self._tick = 0
+        # ---- streaming-scheduler state (barrier runs keep these coherent
+        # too, so checkpoints can switch modes) ----------------------------
+        #: per-owner logical clock: entries this owner has hosted (init,
+        #: handshake, self-train) — per-owner progress once owners
+        #: desynchronize; stamped onto every FederationEvent
+        self._owner_clock: Dict[str, int] = {}
+        #: per-owner published-version counter, bumped on every ACCEPT
+        #: (initial training, handshake, self-train — all accept paths go
+        #: through ``_notify_accept``). Client views are stamped with the
+        #: client's version at freeze time; the streamed bounded-staleness
+        #: gate compares against the current value.
+        self._view_version: Dict[str, int] = {}
+        #: simulated-time accounting (REPORTING ONLY — no scheduling
+        #: decision reads these, which is what keeps streamed runs
+        #: deterministic): when each owner's device next frees up, and when
+        #: each owner's latest accepted version was published
+        self._owner_free: Dict[str, float] = {}
+        self._publish_sim: Dict[str, float] = {}
         self._key = jax.random.PRNGKey(seed + 101)
         # backtrack-scoring inputs are built from the immutable kg splits —
         # cache them per owner instead of regenerating fixed negatives /
@@ -427,10 +514,12 @@ class FederationScheduler:
             score = self.score_fn(name)
             self.best_score[name] = score
             self.best_snapshot[name] = tr.snapshot()
-            self.events.append(
-                FederationEvent(self._tick, name, None, "init", 0.0, score, True)
+            ev = FederationEvent(
+                self._tick, name, None, "init", 0.0, score, True
             )
+            self.events.append(ev)
             self._notify_accept(name)
+            self._stamp_events([None], [ev], level=0)
         # everyone announces itself once training is done (Fig. 2, round 1)
         for name in self.trainers:
             self.broadcast(name)
@@ -448,6 +537,13 @@ class FederationScheduler:
         self._accept_listeners.append(fn)
 
     def _notify_accept(self, owner: str) -> None:
+        # every accept path publishes a new view version FIRST (before the
+        # listener early-return): the streamed staleness gate and the
+        # owner-sticky residency registry key on it whether or not a
+        # serving tier is attached
+        version = self._view_version.get(owner, 0) + 1
+        self._view_version[owner] = version
+        self._tick_engine.placement.note_version(owner, version)
         if not self._accept_listeners:
             return
         params = self.trainers[owner].params
@@ -478,8 +574,15 @@ class FederationScheduler:
         attack=None,
         screen: Optional[float] = None,
         deadline: Optional[float] = None,
+        key: Optional[jnp.ndarray] = None,
     ) -> FederationEvent:
         """ActiveHandshake + KGEmb-Update + Backtrack for one (client, host).
+
+        ``key`` optionally supplies a pre-split PPAT key (the streamed
+        scheduler assigns keys in plan order at pass start so per-level
+        execution preserves the barrier key-stream order); by default the
+        scheduler key stream is split here, exactly as the barrier path
+        always has.
 
         ``client_view`` optionally freezes the client's params (the planner
         passes the tick-start snapshot so serial and batched ticks read the
@@ -539,8 +642,9 @@ class FederationScheduler:
             x = jnp.concatenate([x, cli.get_relation_embeddings(rel[0])])
             y = jnp.concatenate([y, hos_tr.get_relation_embeddings(rel[1])])
 
-        self._key, sub = jax.random.split(self._key)
-        ppat_client, ppat_host, hist = train_ppat(x, y, self.ppat_cfg, key=sub)
+        if key is None:
+            self._key, key = jax.random.split(self._key)
+        ppat_client, ppat_host, hist = train_ppat(x, y, self.ppat_cfg, key=key)
         self.epsilons.append(hist["epsilon"])
         self.accountant.merge(ppat_host.accountant)  # federation-lifetime ε
 
@@ -936,6 +1040,8 @@ class FederationScheduler:
                 entries.append(TickEntry(
                     name, "ppat", client,
                     client_view=dict(self.trainers[client].params),
+                    view_version=self._view_version.get(client, 0),
+                    sim_wait=self._publish_sim.get(client, 0.0),
                 ))
             elif self_train:
                 entries.append(TickEntry(name, "self-train"))
@@ -953,6 +1059,8 @@ class FederationScheduler:
         tick_residency: Optional[str] = None,
         tick_faults=None,
         tick_adversary=None,
+        tick_sync: Optional[str] = None,
+        staleness_bound: Optional[int] = None,
     ) -> Dict[str, float]:
         """Scheduler ticks until quiescence (all queues empty, no improvement,
         nothing deferred or quarantined) or ``max_ticks``. Each tick serves
@@ -966,6 +1074,14 @@ class FederationScheduler:
         env-resolved engine, device placement, output residency, fault layer,
         and adversarial-peer layer for this run.
 
+        ``tick_sync`` ("auto" | "barrier" | "stream", ``REPRO_TICK_SYNC``)
+        picks the scheduling discipline: lockstep barrier ticks (the
+        default and parity oracle) or dependency-level streaming passes
+        (``_run_stream``), where disjoint owner groups advance at their own
+        cadence against versioned client views and ``staleness_bound``
+        (versions; overrides the constructor value) gates how stale a
+        frozen view may be before a re-offer handshake replaces it.
+
         Failure semantics: one failing entry never aborts its tick — it is
         isolated, its host restored from the best snapshot, and the
         handshake re-queued with exponential backoff (``_entry_failed``);
@@ -975,6 +1091,15 @@ class FederationScheduler:
         impl = resolve_tick_impl(
             tick_impl if tick_impl is not None else self.tick_impl
         )
+        sync = resolve_tick_sync(
+            tick_sync if tick_sync is not None else self.tick_sync
+        )
+        bound = (
+            self.staleness_bound if staleness_bound is None
+            else int(staleness_bound)
+        )
+        if bound < 0:
+            raise ValueError(f"staleness_bound={bound} must be >= 0")
         injector = self._fault_injector(tick_faults)
         adversary = self._adversary_for(tick_adversary)
         deadline = self.tick_deadline
@@ -991,6 +1116,13 @@ class FederationScheduler:
                         "training step (REPRO_TRAIN_IMPL=reference); run "
                         "with tick_impl='reference' instead"
                     )
+        if sync == "stream":
+            return self._run_stream(
+                max_ticks, self_train=self_train, impl=impl,
+                injector=injector, adversary=adversary, deadline=deadline,
+                tick_placement=tick_placement, tick_residency=tick_residency,
+                bound=bound,
+            )
         for _ in range(max_ticks):
             self._tick += 1
             plan = self.plan_tick(self_train=self_train)
@@ -1009,6 +1141,8 @@ class FederationScheduler:
                     raise
             else:
                 events = self._run_serial(plan, injector, adversary, deadline)
+            self._stamp_events(plan, events, level=0)
+            self._sim_account_barrier(events)
             any_progress = any(ev.accepted for ev in events)
             if (
                 not any_progress
@@ -1017,6 +1151,236 @@ class FederationScheduler:
                 and not self._quarantine_until
             ):
                 break  # "whole training continues until no more improvement"
+        return dict(self.best_score)
+
+    # ------------------------------------------------- streaming scheduler
+    @staticmethod
+    def _cut_levels(plan: List[TickEntry]) -> List[List[TickEntry]]:
+        """Cut a pass frontier into dependency levels: an entry lands one
+        level past the last earlier entry sharing a participant (host or
+        client) with it, so overlapping entries serialize in plan order and
+        disjoint owner groups stream side by side. The cut is a pure
+        function of the plan — the deterministic execution order streaming
+        rides on."""
+        levels: List[List[TickEntry]] = []
+        last: Dict[str, int] = {}
+        for e in plan:
+            parts = {e.host} if e.client is None else {e.host, e.client}
+            k = max((last[p] + 1 for p in parts if p in last), default=0)
+            while len(levels) <= k:
+                levels.append([])
+            levels[k].append(e)
+            for p in parts:
+                last[p] = k
+        return levels
+
+    def _assign_entry_keys(self, entries: List[TickEntry], injector) -> None:
+        """Pre-split the scheduler PPAT key stream over a streaming pass's
+        handshake entries in PLAN order, so per-level execution consumes
+        keys in exactly the order the barrier scheduler would regardless of
+        how the level cut interleaves owners. Entries whose injected fault
+        kills them before any key is consumed (crash/drop, or a corrupt
+        view the receiver screen rejects) are skipped, matching both
+        engines' no-key-for-isolated-entries behavior — the draw here uses
+        the stateless plan (not the counting injector) so telemetry counts
+        stay single-counted."""
+        for e in entries:
+            if e.kind != "ppat" or e.key_ppat is not None:
+                continue
+            if injector is not None:
+                f = injector.plan.draw(self._tick, e.host, e.client)
+                if f is not None and f.kind in ("crash", "drop", "corrupt"):
+                    continue
+            self._key, sub = jax.random.split(self._key)
+            e.key_ppat = sub
+
+    def _stamp_events(
+        self,
+        entries: List[Optional[TickEntry]],
+        events: List[FederationEvent],
+        *,
+        level: int,
+    ) -> None:
+        """Annotate freshly-emitted events with their dependency level, the
+        host's advanced per-owner clock, and the client-view version the
+        entry read (handshakes) / the host's own published version (init,
+        self-train). Runs in every mode so clocks stay coherent across
+        barrier/stream switches and checkpoints."""
+        for e, ev in zip(entries, events):
+            clk = self._owner_clock.get(ev.host, 0) + 1
+            self._owner_clock[ev.host] = clk
+            ev.level = level
+            ev.owner_clock = clk
+            if e is not None and e.kind == "ppat":
+                ev.view_version = e.view_version
+            else:
+                ev.view_version = self._view_version.get(ev.host, 0)
+
+    def _sim_account_barrier(self, events: List[FederationEvent]) -> None:
+        """Barrier-mode simulated-time model (reporting only — decisions
+        never read sim times): every participant of a tick starts together
+        once the last of them is free and finishes together after the
+        slowest entry — exactly the synchrony cost the streamed mode
+        removes, and the baseline ``sim_makespan`` the straggler bench
+        compares against."""
+        if not events:
+            return
+        hosts = {ev.host for ev in events}
+        start = max(self._owner_free.get(h, 0.0) for h in hosts)
+        fin = start + max(ev.seconds for ev in events)
+        for h in hosts:
+            self._owner_free[h] = fin
+        for ev in events:
+            ev.sim_finish = fin
+            if ev.accepted:
+                self._publish_sim[ev.host] = fin
+
+    def _sim_account_stream(
+        self, entries: List[TickEntry], events: List[FederationEvent]
+    ) -> None:
+        """Streamed simulated-time model: an entry starts as soon as its
+        host is free AND the client version it actually read has been
+        published (``sim_wait``) — fast owners reading a straggler's OLD
+        published version never wait for it; only consumers of a fresh slow
+        publish do, once."""
+        for e, ev in zip(entries, events):
+            start = max(self._owner_free.get(ev.host, 0.0), e.sim_wait)
+            fin = start + max(ev.seconds, 0.0)
+            self._owner_free[ev.host] = fin
+            ev.sim_finish = fin
+            if ev.accepted:
+                self._publish_sim[ev.host] = fin
+
+    def sim_times(self) -> Dict[str, float]:
+        """Per-owner simulated completion times under the active scheduling
+        discipline's time model (reporting only)."""
+        return dict(self._owner_free)
+
+    def sim_makespan(self) -> float:
+        """Simulated federation makespan: when the last owner goes idle."""
+        return max(self._owner_free.values(), default=0.0)
+
+    def _run_stream(
+        self,
+        max_ticks: int,
+        *,
+        self_train: bool,
+        impl: str,
+        injector,
+        adversary,
+        deadline: Optional[float],
+        tick_placement: Optional[str],
+        tick_residency: Optional[str],
+        bound: int,
+    ) -> Dict[str, float]:
+        """Dependency-level streaming passes (``tick_sync="stream"``).
+
+        Each pass plans the frontier exactly like a barrier tick (one entry
+        per Ready owner, client views frozen and version-stamped NOW), cuts
+        it into dependency levels (``_cut_levels``), and dispatches level by
+        level through the chosen engine — so an update accepted at level k
+        feeds the versioned state a level-(k+1) re-offer reads in the SAME
+        wall-clock pass, while disjoint owner groups stream without ever
+        waiting on each other's levels.
+
+        At each level's dispatch the bounded-staleness gate compares every
+        handshake's frozen view version against the client's current one:
+        within ``bound`` the frozen view is used as planned (``bound`` large
+        ⇒ bit-identical to a barrier tick); beyond it the entry emits a
+        ``fault="stale"`` audit event and re-offers — a fresh view is
+        frozen and executed in a trailing level of this pass (the re-offer
+        handshake); still stale after that one re-offer, the offer returns
+        to the front of the host's queue for the next pass. Stale-gated
+        entries consume no keys or fault draws, and re-offered executions
+        re-draw the same ``(tick, host, client)`` fault — streaming changes
+        the schedule, never the random streams."""
+        for _ in range(max_ticks):
+            self._tick += 1
+            plan = self.plan_tick(self_train=self_train)
+            self._assign_entry_keys(plan, injector)
+            pending = [list(lv) for lv in self._cut_levels(plan)]
+            pass_events: List[FederationEvent] = []
+            reoffered: set = set()
+            lvl = 0
+            while pending:
+                level_entries = pending.pop(0)
+                live: List[TickEntry] = []
+                reoffer_level: List[TickEntry] = []
+                for e in level_entries:
+                    if e.kind == "ppat":
+                        delta = (
+                            self._view_version.get(e.client, 0)
+                            - e.view_version
+                        )
+                        if delta > bound:
+                            # too stale to blindly accept: audit + re-offer
+                            before = self.best_score.get(
+                                e.host, float("nan")
+                            )
+                            ev = FederationEvent(
+                                self._tick, e.host, e.client, "ppat",
+                                before, before, False, fault="stale",
+                            )
+                            self.events.append(ev)
+                            self._stamp_events([e], [ev], level=lvl)
+                            pass_events.append(ev)
+                            if (e.host, e.client) not in reoffered:
+                                reoffered.add((e.host, e.client))
+                                reoffer_level.append(TickEntry(
+                                    e.host, "ppat", e.client,
+                                    client_view=dict(
+                                        self.trainers[e.client].params
+                                    ),
+                                    view_version=self._view_version.get(
+                                        e.client, 0
+                                    ),
+                                    sim_wait=self._publish_sim.get(
+                                        e.client, 0.0
+                                    ),
+                                ))
+                            elif e.client not in self._queued[e.host]:
+                                # one re-offer per pass: hand the offer back
+                                # to the front of the queue for next pass
+                                self.queue[e.host].appendleft(e.client)
+                                self._queued[e.host].add(e.client)
+                            continue
+                    live.append(e)
+                if reoffer_level:
+                    # re-frozen views execute after everything already
+                    # scheduled; their keys split now, in level order
+                    self._assign_entry_keys(reoffer_level, injector)
+                    pending.append(reoffer_level)
+                if live:
+                    try:
+                        if impl == "batched":
+                            events = self._tick_engine.execute(
+                                live, self._tick, placement=tick_placement,
+                                residency=tick_residency, faults=injector,
+                                adversary=adversary, deadline=deadline,
+                            )
+                        else:
+                            events = self._run_serial(
+                                live, injector, adversary, deadline
+                            )
+                    except Exception:
+                        done = {
+                            ev.host for ev in self.events
+                            if ev.tick == self._tick and ev.fault != "stale"
+                        }
+                        rest = live + [e for lv in pending for e in lv]
+                        self._unwind_plan(rest, done)
+                        raise
+                    self._stamp_events(live, events, level=lvl)
+                    self._sim_account_stream(live, events)
+                    pass_events.extend(events)
+                lvl += 1
+            if (
+                not any(ev.accepted for ev in pass_events)
+                and all(not q for q in self.queue.values())
+                and not self._deferred
+                and not self._quarantine_until
+            ):
+                break
         return dict(self.best_score)
 
     def _run_serial(
@@ -1068,6 +1432,7 @@ class FederationScheduler:
                     ev = self.federate_once(
                         e.host, e.client, client_view=view, fault=fault,
                         attack=attack, screen=screen, deadline=deadline,
+                        key=e.key_ppat,
                     )
                 else:
                     ev = self.self_train_once(

@@ -88,10 +88,25 @@ owner: aligned-index uploads, virtual-extension structure (neighbor ids,
 joining relations, remapped adjacency triples), bucket-padded extended
 triple stores, and backtrack-scoring inputs (fixed negatives, CSR filters).
 
+**Level-aware streaming** (``tick_sync="stream"``): the streaming scheduler
+calls ``execute`` once per dependency level instead of once per tick. The
+engine is level-ready by construction: entry inputs (params, client views,
+engine keys) are materialized at CALL time and every accept/restore is
+applied before ``execute`` returns, so an update accepted at level k is
+live state when level k+1's protos are built — the result feeding that
+lets a same-pass re-offer handshake read a fresher version. Reaping stays
+per-entry and asynchronous within a level (one ``block_until_ready`` per
+entry, group fallback included), so a level's slowest entry bounds only
+its own level, not the pass. Streamed passes carry pre-split PPAT keys on
+their entries (``TickEntry.key_ppat``, assigned in plan order) so the
+scheduler key stream is consumed in barrier order no matter how the level
+cut interleaves owners.
+
 Bit-parity contract (asserted by ``tests/test_tick_engine.py`` and the tick
 benchmark): with the same per-pair keys, a batched tick produces the same
 accept/reject decisions, the same scores, the same ε history, and
-bit-identical embeddings as ``tick_impl="reference"``.
+bit-identical embeddings as ``tick_impl="reference"`` — per level under
+streaming exactly as per tick under the barrier.
 """
 from __future__ import annotations
 
@@ -883,7 +898,12 @@ class TickEngine:
                 block_e=512,
             )
             if e.kind == "ppat":
-                sched._key, sub = jax.random.split(sched._key)
+                # streamed passes pre-split keys in plan order at pass
+                # start (TickEntry.key_ppat) so per-level execution keeps
+                # the barrier key-stream order; barrier ticks split here
+                sub = getattr(e, "key_ppat", None)
+                if sub is None:
+                    sched._key, sub = jax.random.split(sched._key)
                 # the client view is the paper's client → host communication
                 # — per-tick state, shipped to the host's device explicitly
                 mut.update(client_ent=cview["ent"], key_ppat=sub)

@@ -136,6 +136,33 @@ def resolve_tick_placement(placement: Optional[str] = None) -> str:
     return placement
 
 
+def resolve_tick_sync(sync: Optional[str] = None) -> str:
+    """Pick the federation scheduling discipline: ``barrier`` or ``stream``.
+
+    ``barrier`` (the default) — the lockstep scheduler: one plan per tick,
+    every owner blocks on the slowest entry, accepts take effect next tick.
+    Kept as the parity oracle for the streamed path. ``stream`` — the
+    dependency-level streaming scheduler: each pass's plan is cut into
+    dependency levels (entries whose host/client sets overlap serialize,
+    disjoint entries stream), levels dispatch as they clear, client views
+    are versioned, and a bounded-staleness gate (``staleness_bound=``)
+    triggers re-offer handshakes instead of blind accepts on too-stale
+    views. ``streamed`` is accepted as an alias. ``REPRO_TICK_SYNC``
+    overrides.
+    """
+    if sync is None:
+        sync = os.environ.get("REPRO_TICK_SYNC", "").strip().lower() or None
+    if sync is None or sync == "auto":
+        sync = "barrier"
+    if sync == "streamed":
+        sync = "stream"
+    if sync not in ("barrier", "stream"):
+        raise ValueError(
+            f"unknown tick sync {sync!r} (auto|barrier|stream)"
+        )
+    return sync
+
+
 def resolve_tick_residency(residency: Optional[str] = None) -> str:
     """Pick what happens to tick-entry outputs after a batched tick:
     ``resident`` (the default) leaves every owner's results committed to the

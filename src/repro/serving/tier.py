@@ -28,6 +28,11 @@ between batches. In-flight batches hold a reference to the version they
 were dispatched on and finish there — no traffic pause, no failed
 requests. ``attach(scheduler, owner)`` subscribes the tier to the
 federation's accept hook so every accepted tick update republishes.
+``warm_buckets=`` pre-traces the configured query buckets against the
+freshly staged tables on every replica at publish time, so the first
+post-swap batch (and the first batch ever) pays no compile: programs
+specialize on shape, not version, so each ``(kind, bucket, replica)``
+signature warms exactly once per process.
 
 ``serve_impl="direct"`` (``REPRO_SERVE_IMPL``) disables coalescing — one
 dispatch per request, the baseline ``bench_serving.py`` measures batching
@@ -127,7 +132,8 @@ class KGEServingTier:
                  serve_impl: Optional[str] = None, replicas: Optional[int] = None,
                  home_slot: int = 0, devices=None, max_batch: int = 64,
                  min_bucket: int = 8, max_inflight: Optional[int] = None,
-                 filters: Optional[FilterPack] = None):
+                 filters: Optional[FilterPack] = None,
+                 warm_buckets: Optional[List[Tuple]] = None):
         self.model = model
         self.owner = owner
         self.block_e = block_e
@@ -152,8 +158,24 @@ class KGEServingTier:
         self.inflight: Deque[_InFlight] = deque()
         self.stats: Dict[str, int] = {
             "served": 0, "failed": 0, "batches": 0, "published": 0,
-            "publish_errors": 0, "padded_rows": 0,
+            "publish_errors": 0, "padded_rows": 0, "warmed": 0,
         }
+        #: bucket specs to pre-trace at publish: ("rank", rows) or
+        #: ("topk", rows, k). Rows/k are rounded to the same pow-2 buckets
+        #: the admission loop pads to, so a warmed spec covers every real
+        #: batch that lands in its bucket.
+        self.warm_buckets: List[Tuple] = list(warm_buckets or [])
+        for spec in self.warm_buckets:
+            if (not spec or spec[0] not in ("rank", "topk")
+                    or len(spec) != (2 if spec[0] == "rank" else 3)):
+                raise ValueError(
+                    f"warm bucket {spec!r}: expected ('rank', rows) or "
+                    f"('topk', rows, k)"
+                )
+        #: (kind, bucket_rows, k_bucket, replica_slot) signatures already
+        #: traced — programs specialize on shape not version, so each
+        #: signature warms once per process, not once per publish
+        self._warmed: set = set()
         self._next_rid = 0
         #: serializes publish() against itself (the federation thread) —
         #: the serving loop only ever READS the active pointer, once per
@@ -186,9 +208,72 @@ class KGEServingTier:
                               version=v, owner=self.owner)
             for rep in self.replicas:
                 tv.on(rep.device)
+            self._warm(tv)
             self._active = tv
             self.stats["published"] += 1
             return tv
+
+    def _warm(self, tv: TableVersion) -> None:
+        """Pre-trace the configured query buckets against ``tv``'s staged
+        tables on every replica, with zero-id dummy queries. Tracing (and
+        the compile it triggers) is synchronous, so by the time ``publish``
+        flips the active pointer every warmed ``(kind, bucket, replica)``
+        program is resident in the jit caches and the first post-swap batch
+        dispatches without compiling. Dummy results are dropped on the
+        floor — no stats, no inflight accounting."""
+        if not self.warm_buckets:
+            return
+        for rep in self.replicas:
+            ptab = tv.on(rep.device)
+            for spec in self.warm_buckets:
+                kind = spec[0]
+                rows = _pow2_at_least(
+                    spec[1],
+                    self.min_bucket if self.serve_impl == "batched" else 1,
+                )
+                kb = (
+                    min(_pow2_at_least(spec[2]), self.model.num_entities)
+                    if kind == "topk" else 0
+                )
+                sig = (kind, rows, kb, rep.slot)
+                if sig in self._warmed:
+                    continue
+                h = np.zeros(rows, dtype=np.int64)
+                r = np.zeros(rows, dtype=np.int64)
+                filt = self.filters.rows_for(h, r)
+                if kind == "rank":
+                    t = np.zeros(rows, dtype=np.int64)
+                    filt = np.concatenate(
+                        [t[:, None].astype(np.int32), filt], axis=1
+                    )
+                    dh, dr, dt, df = jax.device_put(
+                        (h, r, t, filt), rep.device
+                    )
+                    side_counts_dispatch(
+                        ptab, self.model, dh, dr, dt, df, side="tail",
+                        block_e=self.block_e, impl=self.rank_impl,
+                    )
+                else:
+                    from repro.serving.engine import (
+                        _streaming_topk_decomposed,
+                        _streaming_topk_generic,
+                    )
+
+                    dh, dr, df = jax.device_put((h, r, filt), rep.device)
+                    qd = lp_query_tails(ptab, self.model, dh, dr)
+                    if qd is not None:
+                        q, table, mode = qd
+                        _streaming_topk_decomposed(
+                            q, table, df, k=kb, block_e=self.block_e,
+                            mode=mode,
+                        )
+                    else:
+                        _streaming_topk_generic(
+                            ptab, self.model, dh, dr, df, k=kb,
+                            block_e=self.block_e,
+                        )
+                self._warmed.add(sig)
+                self.stats["warmed"] += 1
 
     def attach(self, sched, owner: str) -> "KGEServingTier":
         """Subscribe to a ``FederationScheduler``'s accept hook: every

@@ -263,6 +263,54 @@ def test_tier_program_cache_pinned_across_traffic_mixes(kge_world):
     assert tier.stats["failed"] == 0
 
 
+def test_tier_warm_buckets_swap_pays_no_compile(kge_world):
+    """Per-replica warm-up on publish: a tier constructed with
+    ``warm_buckets`` pre-traces those buckets against the staged tables, so
+    first traffic — and the first post-swap batch — never compiles."""
+    m, params, known = kge_world
+    p2 = init_kge(jax.random.PRNGKey(12), m)
+    tier = KGEServingTier(
+        params, m, known, block_e=64, max_batch=16,
+        warm_buckets=[("rank", 8), ("rank", 16), ("topk", 8, 5)],
+    )
+    # constructor publish warmed each spec once per replica
+    assert tier.stats["warmed"] == 3 * len(tier.replicas)
+    warm = serving_program_cache_size()
+    # first real traffic landing in the warmed buckets: zero retraces
+    for i, n in enumerate((3, 16, 11)):
+        q = _tri(n, seed=140 + i)
+        tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    q = _tri(5, seed=150)
+    tier.submit_topk(q[:, 0], q[:, 1], k=5)
+    tier.run_until_drained()
+    assert serving_program_cache_size() == warm
+    # hot-swap: the publish-time re-warm is a no-op (shapes already traced)
+    # and the first post-swap batch still pays no compile
+    tier.publish(p2)
+    assert tier.stats["warmed"] == 3 * len(tier.replicas)
+    assert serving_program_cache_size() == warm
+    b = tier.submit_rank(*(_tri(9, seed=160).T))
+    q = _tri(4, seed=170)
+    tier.submit_topk(q[:, 0], q[:, 1], k=5)
+    tier.run_until_drained()
+    assert serving_program_cache_size() == warm
+    assert tier.stats["failed"] == 0
+    assert b.version == 1
+    # parity: warmed tier still serves bit-identical ranks
+    q = _tri(9, seed=160)
+    r2 = KGECandidateRanker(p2, m, known, block_e=64)
+    np.testing.assert_array_equal(
+        b.result, r2.rank_tails(q[:, 0], q[:, 1], q[:, 2])
+    )
+
+
+def test_tier_warm_buckets_validation(kge_world):
+    m, params, known = kge_world
+    for bad in ([("rank", 8, 3)], [("topk", 8)], [("scan", 8)], [()]):
+        with pytest.raises(ValueError, match="warm bucket"):
+            KGEServingTier(params, m, known, block_e=64, warm_buckets=bad)
+
+
 def test_tier_replica_routing_least_loaded(kge_world, monkeypatch):
     from repro.serving import tier as tier_mod
 

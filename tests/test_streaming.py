@@ -1,0 +1,251 @@
+"""Streamed (dependency-level) federation scheduling: parity, staleness,
+re-offer, and crash-consistent resume mid-stream.
+
+The contracts pinned here:
+
+  * ``tick_sync="stream"`` with a staleness bound no run can exceed takes
+    bit-identical decisions to the lockstep barrier — same accepts, same
+    scores, same ε streams, bit-identical embeddings — with events emitted
+    as a level-order permutation of the barrier's plan order;
+  * on a dependency-serial plan (single owner) even ``staleness_bound=0``
+    reproduces the barrier bit-exactly, in order;
+  * ``staleness_bound=0`` on an aligned mesh fires the bounded-staleness
+    gate: too-stale views are rejected as ``fault="stale"`` audit events
+    and the handshake is re-offered against a re-frozen view, completing
+    the round trip;
+  * both tick engines agree bit-exactly under streaming with a mixed
+    fault + adversary storm firing;
+  * a scheduler killed between streamed passes and resumed from its
+    checkpoint (frontier empty by construction, per-owner clocks and the
+    view-version vector restored) continues bit-identically.
+"""
+import numpy as np
+import pytest
+
+from repro.core.federation import FederationScheduler, NodeState
+from repro.core.ppat import PPATConfig
+from repro.kge.data import synthesize_universe
+from repro.kernels.dispatch import resolve_tick_sync
+
+
+@pytest.fixture(scope="module")
+def universe():
+    stats = [
+        ("A", 12, 90000, 300000), ("B", 10, 70000, 240000),
+        ("C", 8, 60000, 200000),
+    ]
+    aligns = [("A", "B", 30000), ("B", "C", 20000), ("A", "C", 18000)]
+    return synthesize_universe(
+        seed=1, scale=1 / 500, kg_stats=stats, alignments=aligns
+    )
+
+
+@pytest.fixture(scope="module")
+def solo_universe():
+    return synthesize_universe(
+        seed=2, scale=1 / 500, kg_stats=[("S", 10, 80000, 260000)],
+        alignments=[],
+    )
+
+
+def _mini_fed(universe, **kw):
+    defaults = dict(
+        dim=16, ppat_cfg=PPATConfig(steps=3, seed=0),
+        local_epochs=2, update_epochs=1, seed=0,
+    )
+    defaults.update(kw)
+    return FederationScheduler(universe, **defaults)
+
+
+def _event_key(e):
+    # repr-compare floats: exact, and NaN == NaN. ``level`` is deliberately
+    # NOT part of the key — it is the one field that legitimately differs
+    # between the barrier (always 0) and the streamed level cut.
+    return (e.tick, e.host, e.client or "", e.kind, e.fault or "", e.accepted,
+            e.owner_clock, e.view_version,
+            repr(e.score_before), repr(e.score_after), repr(e.epsilon))
+
+
+def _assert_same_params(fa, fb, what):
+    for n in fa.trainers:
+        for k in fa.trainers[n].params:
+            np.testing.assert_array_equal(
+                np.asarray(fa.trainers[n].params[k]),
+                np.asarray(fb.trainers[n].params[k]),
+                err_msg=f"{n}.{k} diverged {what}",
+            )
+
+
+def test_resolve_tick_sync_knob(monkeypatch):
+    assert resolve_tick_sync(None) == "barrier"
+    assert resolve_tick_sync("auto") == "barrier"
+    assert resolve_tick_sync("streamed") == "stream"
+    assert resolve_tick_sync("stream") == "stream"
+    monkeypatch.setenv("REPRO_TICK_SYNC", "stream")
+    assert resolve_tick_sync(None) == "stream"
+    monkeypatch.setenv("REPRO_TICK_SYNC", "")
+    assert resolve_tick_sync(None) == "barrier"
+    with pytest.raises(ValueError, match="tick sync"):
+        resolve_tick_sync("lockstep")
+
+
+def test_staleness_bound_validation(universe):
+    with pytest.raises(ValueError, match="staleness_bound"):
+        _mini_fed(universe, staleness_bound=-1)
+    fed = _mini_fed(universe)
+    fed.initial_training()
+    with pytest.raises(ValueError, match="staleness_bound"):
+        fed.run(max_ticks=1, tick_sync="stream", staleness_bound=-2)
+
+
+def test_stream_large_bound_bit_parity_vs_barrier(universe):
+    """The strongest pin: with a bound no draw can exceed, streaming is a
+    pure re-ordering — every decision, score, ε, clock, and embedding bit
+    matches the barrier; only the level assignment differs."""
+    def run_with(sync):
+        fed = _mini_fed(universe)
+        fed.initial_training()
+        fed.run(max_ticks=3, tick_sync=sync, staleness_bound=10_000)
+        return fed
+
+    bar, strm = run_with("barrier"), run_with("stream")
+    assert all(e.level == 0 for e in bar.events)
+    assert any(e.level > 0 for e in strm.events), (
+        "aligned 3-owner plans must cut into more than one level"
+    )
+    assert not any(e.fault == "stale" for e in strm.events)
+    assert sorted(map(_event_key, bar.events)) == sorted(
+        map(_event_key, strm.events)
+    )
+    assert bar.epsilons == strm.epsilons
+    assert bar.accountant.epsilon() == strm.accountant.epsilon()
+    assert bar.best_score == strm.best_score
+    assert bar._owner_clock == strm._owner_clock
+    assert bar._view_version == strm._view_version
+    _assert_same_params(bar, strm, "between barrier and streamed")
+    # mode interop: the same scheduler object can switch disciplines and
+    # keep its clocks coherent
+    strm.run(max_ticks=1, tick_sync="barrier")
+    bar.run(max_ticks=1, tick_sync="barrier")
+    assert sorted(map(_event_key, bar.events)) == sorted(
+        map(_event_key, strm.events)
+    )
+    _assert_same_params(bar, strm, "after switching back to barrier")
+
+
+def test_stream_bound0_serial_plan_is_barrier_in_order(solo_universe):
+    """A single-owner universe plans dependency-serial passes (every entry
+    shares the owner), so streaming adds no concurrency: bound=0 must
+    reproduce the barrier bit-exactly IN ORDER, with no stale events."""
+    def run_with(sync, bound):
+        fed = _mini_fed(solo_universe)
+        fed.initial_training()
+        fed.run(max_ticks=3, tick_sync=sync, staleness_bound=bound)
+        return fed
+
+    bar, strm = run_with("barrier", 0), run_with("stream", 0)
+    assert not any(e.fault == "stale" for e in strm.events)
+    assert list(map(_event_key, bar.events)) == list(
+        map(_event_key, strm.events)
+    )
+    assert bar.epsilons == strm.epsilons
+    _assert_same_params(bar, strm, "on a dependency-serial plan")
+
+
+def test_stream_bound0_fires_stale_and_reoffers(universe):
+    """bound=0 on an aligned mesh: an accept at an earlier level makes any
+    later-level entry reading that owner's view too stale — the entry is
+    rejected as a ``fault="stale"`` audit event and re-offered against a
+    re-frozen view, which completes the round trip."""
+    fed = _mini_fed(universe)
+    fed.initial_training()
+    fed.run(max_ticks=6, tick_sync="stream", staleness_bound=0)
+
+    stale = [e for e in fed.events if e.fault == "stale"]
+    assert stale, "bound=0 on an all-pairs mesh must reject stale views"
+    assert all(e.kind == "ppat" and not e.accepted for e in stale)
+    # round trip: each rejected offer is re-served — same (host, client) —
+    # by a live entry at the same or a later pass
+    done = {
+        (e.tick, e.host, e.client)
+        for e in fed.events
+        if e.kind == "ppat" and e.fault != "stale"
+    }
+    for s in stale:
+        assert any(
+            h == s.host and c == s.client and t >= s.tick
+            for t, h, c in done
+        ), f"stale offer {s.host}->{s.client} never re-served"
+    # the mesh still converges and drains under the tight bound
+    assert any(e.accepted and e.kind == "ppat" for e in fed.events)
+    assert all(
+        s in (NodeState.READY, NodeState.SLEEP) for s in fed.state.values()
+    )
+    assert not fed._deferred
+
+
+def test_stream_mixed_storm_engine_bit_parity(universe):
+    """Reference vs batched under streaming with a combined fault storm and
+    Byzantine drift attack firing: the per-entry draw/key lockstep must
+    hold level by level — same events, same ε, bit-identical embeddings."""
+    spec = "crash=0.2,straggle=0.1,corrupt=0.1,seed=7,until=3,delay=1e6"
+    adv = "drift=0.4,seed=9,strength=1.0,frac=0.4"
+
+    def run_with(impl):
+        fed = _mini_fed(
+            universe, tick_faults=spec, tick_adversary=adv,
+            tick_deadline=1e5, robust_agg="median",
+        )
+        fed.initial_training()
+        fed.run(max_ticks=4, tick_impl=impl, tick_sync="stream",
+                staleness_bound=10_000)
+        return fed
+
+    fa, fb = run_with("reference"), run_with("batched")
+    assert any(e.fault for e in fa.events), "seeded storm must fire"
+    assert any(e.attack for e in fa.events), "seeded attack must fire"
+    assert list(map(_event_key, fa.events)) == list(
+        map(_event_key, fb.events)
+    )
+    assert [e.level for e in fa.events] == [e.level for e in fb.events]
+    assert fa.epsilons == fb.epsilons
+    assert fa.accountant.epsilon() == fb.accountant.epsilon()
+    _assert_same_params(fa, fb, "between engines under a streamed storm")
+
+
+def test_stream_checkpoint_resume_bit_parity(universe, tmp_path):
+    """Kill-mid-stream: a checkpoint cut between streamed passes (the
+    frontier is empty at every pass boundary) restores per-owner clocks and
+    the view-version vector, and the resumed run continues bit-identically
+    — stale re-offers included, since bound=0 keeps the gate firing."""
+    from repro.checkpoint import restore_scheduler, save_scheduler
+
+    path = str(tmp_path / "stream.npz")
+    a = _mini_fed(universe)
+    a.initial_training()
+    a.run(max_ticks=2, tick_sync="stream", staleness_bound=0)
+    cut = a._tick
+    clocks, versions = dict(a._owner_clock), dict(a._view_version)
+    save_scheduler(path, a)
+    a.run(max_ticks=2, tick_sync="stream", staleness_bound=0)
+
+    b = _mini_fed(universe)
+    restore_scheduler(path, b)
+    assert b._tick == cut
+    assert b._owner_clock == clocks and b._view_version == versions
+    assert all(
+        b._tick_engine.placement.version(n) == v
+        for n, v in versions.items()
+    )
+    b.run(max_ticks=2, tick_sync="stream", staleness_bound=0)
+
+    tail_a = [e for e in a.events if e.tick > cut]
+    assert tail_a, "continuation must have executed entries"
+    assert list(map(_event_key, tail_a)) == list(map(_event_key, b.events))
+    assert [e.level for e in tail_a] == [e.level for e in b.events]
+    assert a.epsilons == b.epsilons
+    assert a.accountant.epsilon() == b.accountant.epsilon()
+    assert a.best_score == b.best_score
+    assert a._owner_clock == b._owner_clock
+    assert a._view_version == b._view_version
+    _assert_same_params(a, b, "after mid-stream resume")
