@@ -2,14 +2,14 @@ PY := PYTHONPATH=src python
 
 .PHONY: tier1 test check-hygiene lint bench-eval bench-train bench-tick \
 	bench-serve bench bench-json bench-smoke chaos-smoke attack-smoke \
-	async-smoke
+	async-smoke serve-chaos-smoke
 
 # CI gate: repo hygiene + lint, the full suite, the engine parity tests
 # explicitly (they are the acceptance bars for the streaming fused-rank eval
 # engine, the device-resident training engine, and the batched federation
 # tick engine), then every bench suite at smoke extents so bench code paths
-# can't rot, the fault soak, the Byzantine-storm gate, and the streamed-
-# scheduling gate.
+# can't rot, the fault soak, the Byzantine-storm gate, the streamed-
+# scheduling gate, and the serving-resilience gate.
 tier1: check-hygiene lint
 	$(PY) -m pytest -x -q
 	$(PY) -m pytest -q tests/test_eval_engine.py -k "parity"
@@ -19,6 +19,7 @@ tier1: check-hygiene lint
 	$(MAKE) chaos-smoke
 	$(MAKE) attack-smoke
 	$(MAKE) async-smoke
+	$(MAKE) serve-chaos-smoke
 
 # ruff when available, pyflakes as second choice, stdlib-ast fallback
 # otherwise (this container ships neither) — unused/duplicate imports fail
@@ -49,6 +50,15 @@ chaos-smoke:
 # quarantine machinery engages.
 attack-smoke:
 	PYTHONPATH=src:. python benchmarks/attack_smoke.py
+
+# serving-resilience gate: seeded replica chaos (pinned crash streak on one
+# replica, pinned straggler, random crash tail, expired deadlines, an
+# over-quota submit) under live federation hot-swaps — asserts zero lost
+# requests (served + shed + failed == submitted), breaker open → probe →
+# re-admit, hedge beats the straggler, and post-flip results bit-equal a
+# per-call ranker. 4 forced host devices so replica routing is real.
+serve-chaos-smoke:
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" PYTHONPATH=src:. python benchmarks/serve_chaos_smoke.py
 
 # streamed-scheduling gate: 8-owner ring with tick_sync="stream" under a
 # pinned straggler + random crashes — asserts the mesh keeps finishing work

@@ -13,11 +13,21 @@ per-call ranker, zero failures everywhere, ≥ 1 version flip in the
 federation scenario; the ≥ 3× batched-vs-per-call throughput bar is
 asserted on full (non-smoke) runs.
 
+A third scenario measures the resilience layer: the faults-off vs
+armed-inert overhead (the chaos layer must cost ≈0 when idle — results
+asserted bit-equal), goodput and shed fraction under a seeded replica
+crash storm with deadlines, and p99 with/without hedged dispatch under a
+straggler storm (full runs assert hedging beats no-hedging — the straggle
+delay is simulated, so the comparison is compute-independent).
+
 Rows: ``serving.percall.E{N}`` / ``serving.closed.E{N}`` (µs/query),
 ``serving.closed.{p50,p99}_ms.E{N}`` / ``.qps.E{N}``, the same for
 ``serving.open.*`` (λ = 70% of measured closed-loop capacity),
-``serving.speedup.E{N}`` (dimensionless), and
-``serving.{noticks,with_ticks}.E{N}`` for the federation scenario.
+``serving.speedup.E{N}`` (dimensionless),
+``serving.{noticks,with_ticks}.E{N}`` for the federation scenario, and the
+resilience rows ``serving.fault_{off,armed,overhead}.E{N}``,
+``serving.storm.{goodput,shed_frac}.E{N}``, and
+``serving.storm.p99_ms.{nohedge,hedge}.E{N}``.
 """
 from __future__ import annotations
 
@@ -222,6 +232,120 @@ def _bench_with_ticks(rows, *, dim, steps, epochs, max_ticks, n_queries,
     ))
 
 
+def _bench_resilience(rows, *, entities, dim, n_queries, block_e, max_batch,
+                      seed=0):
+    """The chaos layer measured: armed-inert overhead (pinned ≈0), goodput
+    and shed fraction under a seeded crash storm, hedging vs not under a
+    straggler storm."""
+    import jax
+
+    from repro.core.faults import ServeFaultPlan
+    from repro.kge.models import KGEModel, init_kge
+
+    rng = np.random.default_rng(seed)
+    n_rel = 8
+    known = _tri(rng, 5000, entities, n_rel)
+    model = KGEModel("transe", num_entities=entities, num_relations=n_rel,
+                     dim=dim)
+    params = init_kge(jax.random.PRNGKey(seed), model)
+    queries = _tri(rng, n_queries, entities, n_rel)
+    devs = jax.devices()
+    ring = [devs[i % len(devs)] for i in range(2)]  # ≥2 slots: retry/hedge
+    e = entities
+
+    # pre-trace every bucket the closed loop can produce on BOTH replicas:
+    # a cold replica paying jit compile mid-measurement would drown the
+    # overhead and hedging comparisons in compile noise
+    warm = [("rank", b) for b in (8, 16, max_batch)]
+
+    def make(**kw):
+        return KGEServingTier(params, model, known, block_e=block_e,
+                              max_batch=max_batch, replicas=2, devices=ring,
+                              warm_buckets=warm, **kw)
+
+    # ---- faults-off vs armed-inert: the idle chaos layer costs ≈0 -------
+    off = make()
+    closed_loop(off, queries[:max_batch], concurrency=max_batch)  # warm
+    oreqs, owall = closed_loop(off, queries, concurrency=2 * max_batch)
+    armed = make(serve_faults="screen")
+    closed_loop(armed, queries[:max_batch], concurrency=max_batch)
+    areqs, awall = closed_loop(armed, queries, concurrency=2 * max_batch)
+    for a, b in zip(oreqs, areqs):  # armed but inert ⇒ bit-identical
+        np.testing.assert_array_equal(a.result, b.result)
+    us_off = owall / n_queries * 1e6
+    us_armed = awall / n_queries * 1e6
+    overhead = us_armed / us_off - 1.0
+    rows.append((f"serving.fault_off.E{e}", us_off, "chaos layer off"))
+    rows.append((f"serving.fault_armed.E{e}", us_armed,
+                 "armed, zero injection (output screens on)"))
+    rows.append((f"serving.fault_overhead.E{e}", overhead,
+                 f"armed/off - 1 = {overhead:+.3f} (≈0)"))
+    if not smoke():
+        assert abs(overhead) < 0.5, (
+            f"armed-inert chaos layer overhead {overhead:+.2f} not ≈0"
+        )
+
+    # ---- goodput + shed fraction under a seeded crash storm -------------
+    storm = make(
+        serve_faults=ServeFaultPlan(crash=0.25, straggle=0.1, seed=7,
+                                    delay=0.002),
+        retry_limit=2, breaker_fails=3, probe_after=8,
+    )
+    closed_loop(storm, queries[:max_batch], concurrency=max_batch)
+    base = storm.stats["submitted"]
+    # burst-submit with a deadline ≈30% of the measured serial drain time
+    # (+2 pre-expired sentinels): head-of-line requests serve, tail sheds
+    deadline = max(0.002, 0.3 * n_queries * us_off * 1e-6)
+    for q in queries:
+        storm.submit_rank(q[:1], q[1:2], q[2:3], deadline=deadline)
+    for q in queries[:2]:
+        storm.submit_rank(q[:1], q[1:2], q[2:3], deadline=0.0)
+    storm.run_until_drained()  # asserts served + shed + failed == submitted
+    s = storm.stats
+    n_storm = s["submitted"] - base
+    goodput = s["served"] / s["submitted"]
+    shed_frac = s["shed"] / n_storm
+    rows.append((f"serving.storm.goodput.E{e}", goodput,
+                 f"served/submitted under crash storm "
+                 f"(retried={s['retried']},failed={s['failed']})"))
+    rows.append((f"serving.storm.shed_frac.E{e}", shed_frac,
+                 f"deadline={deadline * 1e3:.1f}ms burst, shed={s['shed']}"))
+    assert 0.0 <= shed_frac < 1.0 and s["shed"] >= 2, s
+    if not smoke():
+        assert goodput >= 0.5, f"storm goodput collapsed: {goodput:.2f}"
+
+    # ---- p99 with vs without hedging: one chronically slow replica ------
+    # replica slot 1 straggles EVERY batch it takes (pinned, simulated
+    # delay ≫ compute AND hedge_after ≫ per-batch compute — hedging below
+    # normal batch latency just duplicates healthy work): without hedging,
+    # its batches eat the full delay; with hedging they re-dispatch to the
+    # fast replica after hedge_after. Deterministic, so full runs assert
+    # the win.
+    from repro.core.faults import ServeFault
+
+    delay = pick(1.0, 0.03)
+    plan = ServeFaultPlan(
+        table={(s, 1): ServeFault("straggle", delay=delay)
+               for s in range(4096)}
+    )
+    p99 = {}
+    for label, hedge in (("nohedge", None), ("hedge", pick(0.25, 0.01))):
+        t = make(serve_faults=plan, hedge_after=hedge)
+        closed_loop(t, queries[:max_batch], concurrency=max_batch)
+        reqs, _ = closed_loop(t, queries, concurrency=2 * max_batch)
+        t.run_until_drained()
+        assert t.stats["failed"] == 0, t.stats
+        p99[label] = _lat_ms(reqs, 99)
+        extra = (f"hedged={t.stats['hedged']}" if hedge is not None
+                 else f"straggles={t.fault_counts.get('straggle', 0)}")
+        rows.append((f"serving.storm.p99_ms.{label}.E{e}", p99[label],
+                     f"slow replica delay={delay * 1e3:.0f}ms, {extra}"))
+    if not smoke():
+        assert p99["hedge"] < p99["nohedge"], (
+            f"hedging did not cut straggler p99: {p99}"
+        )
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--csv", default=None, help="also append rows to this file")
@@ -242,6 +366,11 @@ def main(argv=None) -> None:
     _bench_with_ticks(
         rows, dim=pick(24, 16), steps=pick(30, 6), epochs=pick(10, 2),
         max_ticks=pick(3, 1), n_queries=pick(128, 10),
+        max_batch=pick(32, 8),
+    )
+    _bench_resilience(
+        rows, entities=pick(100_000, 768), dim=args.dim,
+        n_queries=pick(128, 12), block_e=pick(8192, 256),
         max_batch=pick(32, 8),
     )
 

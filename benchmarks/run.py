@@ -36,6 +36,7 @@ from benchmarks import (
     bench_time_cost,
     bench_train_engine,
     bench_triple_classification,
+    serve_chaos_smoke,
 )
 from benchmarks.common import drain_recorded, write_bench_json
 
@@ -50,6 +51,9 @@ SUITES = [
     ("train_engine", lambda: bench_train_engine.main([])),        # sparse scan
     ("federation_tick", lambda: bench_federation_tick.main([])),  # tick engine
     ("serving", lambda: bench_serving.main([])),                  # serving tier
+    # pass/fail resilience gate (emits no rows → never lands in BENCH json);
+    # registered so the tier-1 bench-smoke run exercises the chaos scenario
+    ("serve_chaos", lambda: serve_chaos_smoke.gate()),
     ("noise_ablation", bench_noise_ablation.main),                # Tab. 5
     ("alignment_scale", bench_alignment_scale.main),              # Tab. 6
     ("aggregation", bench_aggregation.main),                      # Tab. 7

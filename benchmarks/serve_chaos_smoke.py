@@ -1,0 +1,194 @@
+"""Tier-1 serving-resilience gate: seeded replica chaos under live hot-swaps.
+
+Drives a ``KGEServingTier`` attached to a live 2-owner federation through a
+deterministic fault storm — a pinned crash streak on one replica (the
+circuit breaker MUST open), a pinned straggler (the hedge MUST fire), a
+random crash tail, deadline-expired requests (MUST shed), and an
+over-quota submit burst (MUST reject) — with federation ticks hot-swapping
+the serving tables mid-storm, then asserts the resilience contract at
+drain:
+
+  * zero LOST requests: every submitted request resolves to exactly one of
+    served / shed / failed (``served + shed + failed == submitted`` — the
+    tier itself re-asserts this at every drain point);
+  * the storm actually fired (crash + straggle both observed), so the gate
+    cannot silently pass by the fault layer rotting into a no-op;
+  * failure isolation worked: batches were retried (not failed wholesale)
+    and the goodput floor holds despite the storm;
+  * the breaker opened on the crashing replica, and — on the clean tail —
+    its timed probe re-admitted it (``breaker_close``), leaving every
+    replica healthy after cooldown;
+  * hedged dispatch beat the pinned straggler (``hedged >= 1``);
+  * hot-swap under fire: at least one federation flip reached serving, and
+    post-flip results are bit-equal to a per-call ranker on the owner's
+    current params.
+
+Runs in a handful of seconds on CPU CI (``make serve-chaos-smoke``, wired
+into ``make tier1``) and under ``benchmarks/run.py`` (the ``serve_chaos``
+suite) so the bench-smoke gate exercises it too. It is a pass/fail gate,
+not a measurement: it emits no rows, so it never lands in ``BENCH_*.json``
+artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import sys
+import time
+
+import numpy as np
+
+from repro.core.faults import ServeFault, ServeFaultPlan
+from repro.serving import KGECandidateRanker, KGEServingTier, TierOverloadError
+
+#: pinned streak: every launch routed to replica slot 1 in the first eight
+#: launch seqs crashes — consecutive failures there are guaranteed, so the
+#: breaker deterministically opens; slot 0 absorbs the retries
+_CRASH_STREAK = {(s, 1): ServeFault("crash") for s in range(8)}
+#: pinned straggler at launch seq 10, whichever replica takes it: 30
+#: simulated seconds of suppressed readiness — only a hedge can win
+_STRAGGLE = {(10, s): ServeFault("straggle", delay=30.0) for s in range(8)}
+
+
+def _fault_plan() -> ServeFaultPlan:
+    return ServeFaultPlan(
+        crash=0.2, seed=11, until=40,
+        table={**_CRASH_STREAK, **_STRAGGLE},
+    )
+
+
+def gate(*, max_ticks: int = 1) -> dict:
+    """Run the scenario; raises RuntimeError on any contract violation.
+    Returns the tier's stats dict (for the CLI summary)."""
+    import jax
+
+    from benchmarks.common import small_universe
+    from repro.core.federation import FederationScheduler
+    from repro.core.ppat import PPATConfig
+
+    uni = small_universe(seed=7, n=2)
+    ctr = itertools.count()
+    sched = FederationScheduler(
+        uni, dim=16, ppat_cfg=PPATConfig(steps=4, seed=0),
+        local_epochs=2, update_epochs=2, seed=0,
+        score_fn=lambda name: float(next(ctr)),  # monotone ⇒ accepts pinned
+    )
+    sched.initial_training()
+    devs = jax.devices()
+    # at least two replica slots even on a 1-device host (same physical
+    # device twice): retry/hedge/breaker semantics need a second slot
+    ring = [devs[i % len(devs)] for i in range(max(2, min(4, len(devs))))]
+    tier = KGEServingTier.for_owner(
+        sched, "Alpha", block_e=256, max_batch=8, home_slot=0,
+        replicas=len(ring), devices=ring,
+        serve_faults=_fault_plan(), retry_limit=2,
+        breaker_fails=2, probe_after=4, hedge_after=0.05,
+    )
+    e = tier.model.num_entities
+    rng = np.random.default_rng(3)
+    qs = np.stack(
+        [rng.integers(0, e, 160), rng.integers(0, 4, 160),
+         rng.integers(0, e, 160)], axis=1,
+    ).astype(np.int64)
+
+    reqs = []
+
+    def burst(lo, hi, rows=4, **kw):
+        for i in range(lo, hi, rows):
+            reqs.append(tier.submit_rank(
+                qs[i:i + rows, 0], qs[i:i + rows, 1], qs[i:i + rows, 2], **kw
+            ))
+            tier.step()
+
+    t0 = time.perf_counter()
+    # phase 1 — into the pinned crash streak + straggler + random storm
+    burst(0, 80)
+    # a few requests with an already-expired deadline: MUST shed, not fail
+    burst(80, 88, deadline=0.0)
+    tier.run_until_drained()
+    # phase 2 — federation ticks flip the serving tables mid-storm
+    v0 = tier.version
+    sched.run(max_ticks=max_ticks)
+    flips = tier.version - v0
+    # phase 3 — clean cooldown traffic (past `until`): probes re-admit
+    post = tier.submit_rank(qs[:4, 0], qs[:4, 1], qs[:4, 2])
+    reqs.append(post)
+    tier.step()
+    burst(88, 160)
+    tier.run_until_drained()
+    wall = time.perf_counter() - t0
+
+    # admission reject: one over-quota submit must raise, and must not
+    # enter the accounting
+    rejected = False
+    tier.max_queue = 0
+    try:
+        tier.submit_rank(qs[:1, 0], qs[:1, 1], qs[:1, 2])
+    except TierOverloadError:
+        rejected = True
+    tier.max_queue = None
+
+    s = tier.stats
+    goodput = s["served"] / max(s["submitted"], 1)
+    tr = sched.trainers["Alpha"]
+    known = np.concatenate(
+        [uni["Alpha"].train, uni["Alpha"].valid, uni["Alpha"].test]
+    )
+    ranker = KGECandidateRanker(dict(tr.params), tr.model, known, block_e=256)
+    want = ranker.rank_tails(qs[:4, 0], qs[:4, 1], qs[:4, 2])
+
+    checks = [
+        (s["served"] + s["shed"] + s["failed"] == s["submitted"],
+         f"requests lost: {s}"),
+        (all(r.done for r in reqs), "undrained request leaked"),
+        (tier.fault_counts.get("crash", 0) >= 2
+         and tier.fault_counts.get("straggle", 0) >= 1,
+         f"storm too quiet: {tier.fault_counts}"),
+        (s["retried"] >= 1, "no batch ever retried — isolation untested"),
+        (s["breaker_open"] >= 1,
+         f"breaker never opened under the pinned crash streak: {s}"),
+        (s["breaker_close"] >= 1,
+         f"probe never re-admitted the broken replica: {s}"),
+        (all(rp.healthy for rp in tier.replicas),
+         f"replica left unhealthy after clean cooldown: {tier.health()}"),
+        (s["hedged"] >= 1, f"hedge never fired on the pinned straggler: {s}"),
+        (s["shed"] >= 1, f"expired requests did not shed: {s}"),
+        (all(r.state == "shed" for r in reqs if r.deadline == 0.0),
+         "a deadline-0 request did not shed"),
+        (rejected and s["rejected"] == 1,
+         "over-quota submit was not rejected"),
+        (goodput >= 0.7, f"goodput floor broken: {goodput:.2f} < 0.7"),
+        (flips >= 1, "federation ran but no version flip reached serving"),
+        (post.state == "served" and np.array_equal(post.result, want),
+         "post-flip result not bit-equal to per-call ranker"),
+        (s["publish_errors"] == 0, f"hot-swap publish failed: {s}"),
+    ]
+    failures = [msg for ok, msg in checks if not ok]
+    print(
+        f"serve-chaos-smoke: replicas={len(ring)} wall={wall:.1f}s "
+        f"submitted={s['submitted']} served={s['served']} shed={s['shed']} "
+        f"failed={s['failed']} retried={s['retried']} hedged={s['hedged']} "
+        f"breaker={s['breaker_open']}/{s['breaker_close']} flips={flips} "
+        f"goodput={goodput:.2f} faults={dict(tier.fault_counts)}"
+    )
+    if failures:
+        raise RuntimeError("; ".join(failures))
+    return s
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-ticks", type=int, default=1)
+    args = ap.parse_args(argv)
+    try:
+        gate(max_ticks=args.max_ticks)
+    except RuntimeError as ex:
+        print(f"serve-chaos-smoke FAIL: {ex}", file=sys.stderr)
+        return 1
+    print("serve-chaos-smoke: PASS — zero lost requests, breaker cycled, "
+          "hedge won, shed/reject enforced, hot-swap served bit-equal")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -230,6 +230,28 @@ def resolve_tick_adversary(spec=None):
     return spec
 
 
+def resolve_serve_faults(spec=None):
+    """Resolve the serving-tier fault-injection layer: returns ``None`` (off
+    — the default, keeping the query fast path bit-identical to the
+    pre-fault tier) or a fault-plan description the tier hands to
+    ``core.faults.ServeFaultPlan.parse``.
+
+    ``spec`` may be a spec string, an already-built ``ServeFaultPlan``
+    (handed through verbatim — the test harness path), or ``None`` to
+    consult ``REPRO_SERVE_FAULTS``. Off-values (``off``/``0``/``false``/
+    ``none``/empty) resolve to ``None``.
+    """
+    if spec is not None and not isinstance(spec, str):
+        return spec  # ServeFaultPlan passed programmatically
+    if spec is None:
+        spec = os.environ.get("REPRO_SERVE_FAULTS", "").strip() or None
+    if spec is None:
+        return None
+    if spec.strip().lower() in _FALSY + ("", "none"):
+        return None
+    return spec
+
+
 def resolve_serve_impl(impl: Optional[str] = None) -> str:
     """Pick the serving-tier dispatch mode: ``batched`` or ``direct``.
 

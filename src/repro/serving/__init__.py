@@ -10,5 +10,6 @@ from repro.serving.tables import (  # noqa: F401
 from repro.serving.tier import (  # noqa: F401
     KGEServingTier,
     QueryRequest,
+    TierOverloadError,
     serving_program_cache_size,
 )

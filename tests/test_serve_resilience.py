@@ -1,0 +1,439 @@
+"""Serving resilience: seeded chaos plans, failure isolation (retry on a
+different replica, bit-equal), the circuit breaker (open → probe →
+re-admit), poisoned-output screening, straggler hedging, deadline shedding,
+max_queue admission rejects, the submit/dispatch version-race re-check, and
+the served + shed + failed == submitted accounting invariant — standalone
+and under a combined fault storm × live federation ticks × hot-swap."""
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.faults import ServeFault, ServeFaultError, ServeFaultPlan
+from repro.kernels.dispatch import resolve_serve_faults
+from repro.kge.models import KGEModel
+from repro.kge.trainer import init_kge
+from repro.serving import (
+    KGECandidateRanker,
+    KGEServingTier,
+    TierOverloadError,
+    serving_program_cache_size,
+)
+
+E, R, D = 300, 6, 16
+
+
+def _tri(n, seed):
+    rng = np.random.default_rng(seed)
+    return np.stack(
+        [rng.integers(0, E, n), rng.integers(0, R, n), rng.integers(0, E, n)],
+        axis=1,
+    ).astype(np.int64)
+
+
+@pytest.fixture(scope="module")
+def kge_world():
+    m = KGEModel("transe", E, R, D)
+    params = init_kge(jax.random.PRNGKey(1), m)
+    known = _tri(400, seed=100)
+    return m, params, known
+
+
+def _two_replica_tier(kge_world, **kw):
+    m, params, known = kge_world
+    dev = jax.devices()[0]
+    kw.setdefault("block_e", 64)
+    kw.setdefault("max_batch", 8)
+    return KGEServingTier(params, m, known, replicas=2,
+                          devices=[dev, dev], **kw)
+
+
+def _check_sums(tier):
+    s = tier.stats
+    assert s["served"] + s["shed"] + s["failed"] == s["submitted"], s
+
+
+# ---------------------------------------------------------------------------
+# ServeFaultPlan: determinism, grammar, resolution
+# ---------------------------------------------------------------------------
+def test_serve_fault_plan_draws_deterministic():
+    plan = ServeFaultPlan(crash=0.3, straggle=0.3, poison=0.2, seed=7)
+    a = [plan.draw(b, r) for b in range(40) for r in range(2)]
+    b = [plan.draw(b, r) for b in range(40) for r in range(2)]
+    assert [f and f.kind for f in a] == [f and f.kind for f in b]
+    kinds = {f.kind for f in a if f is not None}
+    assert kinds  # at 80% total rate over 80 draws something must fire
+    assert kinds <= {"crash", "straggle", "poison"}
+    # a different seed reshuffles the schedule
+    c = [ServeFaultPlan(crash=0.3, straggle=0.3, poison=0.2, seed=8).draw(b, r)
+         for b in range(40) for r in range(2)]
+    assert [f and f.kind for f in a] != [f and f.kind for f in c]
+
+
+def test_serve_fault_plan_until_and_table():
+    plan = ServeFaultPlan(crash=1.0, until=3)
+    assert all(plan.draw(b, 0).kind == "crash" for b in range(4))
+    assert all(plan.draw(b, 0) is None for b in range(4, 10))
+    pinned = ServeFaultPlan(
+        table={(2, 1): ServeFault("straggle", delay=0.5)}
+    )
+    assert pinned.draw(2, 1).delay == 0.5
+    assert pinned.draw(2, 0) is None and pinned.draw(1, 1) is None
+    with pytest.raises(ValueError):
+        ServeFaultPlan(crash=1.5)
+
+
+def test_serve_fault_plan_parse_grammar():
+    p = ServeFaultPlan.parse("crash=0.2,straggle=0.1,seed=7,until=40,delay=0.5,rows=2")
+    assert (p.crash, p.straggle, p.seed, p.until, p.delay, p.rows) == \
+        (0.2, 0.1, 7, 40, 0.5, 2)
+    assert ServeFaultPlan.parse("on").crash == 0.0  # armed but inert
+    with pytest.raises(ValueError):
+        ServeFaultPlan.parse("explode=1")
+
+
+def test_resolve_serve_faults(monkeypatch):
+    assert resolve_serve_faults(None) is None
+    monkeypatch.setenv("REPRO_SERVE_FAULTS", "off")
+    assert resolve_serve_faults(None) is None
+    monkeypatch.setenv("REPRO_SERVE_FAULTS", "crash=0.5,seed=3")
+    assert resolve_serve_faults(None) == "crash=0.5,seed=3"
+    plan = ServeFaultPlan(poison=0.1)
+    assert resolve_serve_faults(plan) is plan  # programmatic passthrough
+
+
+# ---------------------------------------------------------------------------
+# Failure isolation: retry on another replica, bit-equal results
+# ---------------------------------------------------------------------------
+def test_crash_retries_on_other_replica_bit_equal(kge_world):
+    m, params, known = kge_world
+    # launch seq 0 routes to slot 0 (fresh tier) and crashes; the retry
+    # must land on slot 1 and serve the SAME pinned version bit-equal
+    tier = _two_replica_tier(
+        kge_world,
+        serve_faults=ServeFaultPlan(table={(0, 0): ServeFault("crash")}),
+    )
+    q = _tri(5, seed=1)
+    req = tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    tier.run_until_drained()
+    assert req.state == "served" and req.error is None
+    assert tier.stats["retried"] == 1 and tier.stats["failed"] == 0
+    assert tier.fault_counts == {"crash": 1}
+    assert [rp.fails for rp in tier.replicas] == [1, 0]
+    ranker = KGECandidateRanker(params, m, known, block_e=64)
+    np.testing.assert_array_equal(
+        req.result, ranker.rank_tails(q[:, 0], q[:, 1], q[:, 2])
+    )
+    _check_sums(tier)
+
+
+def test_retry_exhaustion_fails_requests_not_tier(kge_world):
+    tier = _two_replica_tier(
+        kge_world, serve_faults=ServeFaultPlan(crash=1.0), retry_limit=1
+    )
+    q = _tri(4, seed=2)
+    req = tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    ok = tier.submit_rank(q[:1, 0], q[:1, 1], q[:1, 2])
+    # first batch: primary + retry both crash -> its requests fail;
+    # the tier itself keeps serving (and failing) later traffic
+    tier.run_until_drained()
+    assert req.state == "failed" and isinstance(req.error, ServeFaultError)
+    assert ok.state == "failed"  # crash=1.0: everything crashes
+    assert tier.stats["failed"] == tier.stats["submitted"] == 2
+    _check_sums(tier)
+
+
+def test_poison_screened_and_retried(kge_world):
+    m, params, known = kge_world
+    tier = _two_replica_tier(
+        kge_world,
+        serve_faults=ServeFaultPlan(
+            table={(0, 0): ServeFault("poison", rows=2)}
+        ),
+    )
+    q = _tri(6, seed=3)
+    req = tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    tier.run_until_drained()
+    assert req.state == "served"
+    assert tier.stats["retried"] == 1 and tier.stats["failed"] == 0
+    ranker = KGECandidateRanker(params, m, known, block_e=64)
+    np.testing.assert_array_equal(
+        req.result, ranker.rank_tails(q[:, 0], q[:, 1], q[:, 2])
+    )
+    _check_sums(tier)
+
+
+def test_poison_screen_topk(kge_world):
+    m, params, known = kge_world
+    tier = _two_replica_tier(
+        kge_world,
+        serve_faults=ServeFaultPlan(table={(0, 0): ServeFault("poison")}),
+    )
+    q = _tri(4, seed=4)
+    req = tier.submit_topk(q[:, 0], q[:, 1], k=5)
+    tier.run_until_drained()
+    assert req.state == "served" and tier.stats["retried"] == 1
+    ranker = KGECandidateRanker(params, m, known, block_e=64)
+    ids, vals = req.result
+    rids, rvals = ranker.topk_tails(q[:, 0], q[:, 1], k=5)
+    np.testing.assert_array_equal(ids, rids)
+    np.testing.assert_array_equal(vals, rvals)
+    _check_sums(tier)
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker: open on consecutive failures, probe re-admission
+# ---------------------------------------------------------------------------
+def test_breaker_opens_probes_and_readmits(kge_world):
+    tier = _two_replica_tier(
+        kge_world,
+        serve_faults=ServeFaultPlan(crash=1.0, until=1),  # seqs 0,1 crash
+        retry_limit=0, breaker_fails=1, probe_after=4,
+    )
+    q = _tri(3, seed=5)
+    a = tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    tier.run_until_drained()  # seq 0 -> slot 0 crashes, breaker opens
+    assert a.state == "failed"
+    assert tier.stats["breaker_open"] == 1
+    assert [rp.healthy for rp in tier.replicas] == [False, True]
+    b = tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    tier.run_until_drained()  # seq 1 -> slot 1 (only healthy) crashes too
+    assert b.state == "failed"
+    assert tier.stats["breaker_open"] == 2
+    assert [rp.healthy for rp in tier.replicas] == [False, False]
+    # storm over (seq > until): the whole-ring fallback serves, and the
+    # success closes the breaker on whichever replica took the probe
+    c = tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    tier.run_until_drained()
+    assert c.state == "served"
+    assert tier.stats["breaker_close"] >= 1
+    assert any(rp.healthy for rp in tier.replicas)
+    h = tier.health()
+    assert {x["slot"] for x in h} == {0, 1}
+    assert all(x["ewma_ms"] is None or x["ewma_ms"] >= 0 for x in h)
+    _check_sums(tier)
+
+
+def test_probe_due_replica_rejoins_pool(kge_world):
+    tier = _two_replica_tier(kge_world, breaker_fails=1, probe_after=2)
+    rep0 = tier.replicas[0]
+    tier._note_failure(rep0)
+    assert not rep0.healthy and tier.stats["breaker_open"] == 1
+    # probe not due yet: pool excludes the open replica
+    assert rep0 not in tier._eligible()
+    tier._seq = rep0.probe_at  # advance the launch clock to the probe
+    assert rep0 in tier._eligible()
+    picked = tier._pick_replica()
+    if picked is rep0:  # the pick IS the probe: next probe pushed out
+        assert rep0.probe_at == tier._seq + tier.probe_after
+    tier._note_success(rep0, 0.001)
+    assert rep0.healthy and rep0.fails == 0
+    assert tier.stats["breaker_close"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Straggle + hedging
+# ---------------------------------------------------------------------------
+def test_straggle_hedge_first_result_wins_bit_equal(kge_world):
+    m, params, known = kge_world
+    # primary launch straggles 30s (simulated); the hedge to the other
+    # replica wins long before that — results must be bit-equal anyway
+    tier = _two_replica_tier(
+        kge_world,
+        serve_faults=ServeFaultPlan(
+            table={(0, 0): ServeFault("straggle", delay=30.0)}
+        ),
+        hedge_after=0.01,
+    )
+    q = _tri(5, seed=6)
+    req = tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    tier.run_until_drained()
+    assert req.state == "served" and req.latency < 30.0
+    assert tier.stats["hedged"] == 1 and tier.stats["failed"] == 0
+    ranker = KGECandidateRanker(params, m, known, block_e=64)
+    np.testing.assert_array_equal(
+        req.result, ranker.rank_tails(q[:, 0], q[:, 1], q[:, 2])
+    )
+    # the straggling loser was reaped as a zombie: no leaked in-flight slot
+    assert all(rp.inflight == 0 for rp in tier.replicas)
+    assert not tier._zombies
+    _check_sums(tier)
+
+
+def test_straggle_without_hedge_just_waits(kge_world):
+    tier = _two_replica_tier(
+        kge_world,
+        serve_faults=ServeFaultPlan(
+            table={(0, 0): ServeFault("straggle", delay=0.05)}
+        ),
+    )
+    q = _tri(3, seed=7)
+    req = tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    tier.run_until_drained()
+    assert req.state == "served" and tier.stats["hedged"] == 0
+    assert req.latency >= 0.05  # the simulated delay was honored
+    _check_sums(tier)
+
+
+# ---------------------------------------------------------------------------
+# Admission control: max_queue reject, deadline shed
+# ---------------------------------------------------------------------------
+def test_max_queue_rejects_at_submit(kge_world):
+    m, params, known = kge_world
+    tier = KGEServingTier(params, m, known, block_e=64, max_queue=2)
+    q = _tri(2, seed=8)
+    tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    with pytest.raises(TierOverloadError):
+        tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    assert tier.stats["rejected"] == 1 and tier.stats["submitted"] == 2
+    tier.run_until_drained()
+    assert tier.stats["served"] == 2
+    _check_sums(tier)  # rejected requests never entered the accounting
+
+
+def test_deadline_shed_at_coalesce(kge_world):
+    m, params, known = kge_world
+    tier = KGEServingTier(params, m, known, block_e=64, max_batch=8)
+    q = _tri(2, seed=9)
+    doomed = tier.submit_rank(q[:, 0], q[:, 1], q[:, 2], deadline=0.0)
+    live = tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    mid = tier.submit_topk(q[:, 0], q[:, 1], k=3, deadline=0.0)
+    tier.run_until_drained()
+    assert doomed.state == "shed" and doomed.done
+    assert doomed.result is None and doomed.error is None  # shed != failed
+    assert doomed.finished_at is not None
+    assert mid.state == "shed"
+    assert live.state == "served"
+    assert tier.stats["shed"] == 2 and tier.stats["served"] == 1
+    assert tier.stats["failed"] == 0
+    _check_sums(tier)
+
+
+# ---------------------------------------------------------------------------
+# Submit/dispatch version race (regression)
+# ---------------------------------------------------------------------------
+def test_version_race_recheck_against_pinned_version(kge_world):
+    m, params, known = kge_world
+    tier = KGEServingTier(params, m, known, block_e=64, max_batch=8)
+    q = _tri(4, seed=10)
+    bad_ent = int(q[0, 0])
+    # valid under v0 at submit time...
+    racy = tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    clean_q = _tri(4, seed=11)
+    clean_q[:, [0, 2]] = np.where(
+        clean_q[:, [0, 2]] == bad_ent, (bad_ent + 1) % E, clean_q[:, [0, 2]]
+    )
+    clean = tier.submit_rank(clean_q[:, 0], clean_q[:, 1], clean_q[:, 2])
+    # ...then a hot-swap lands BEFORE dispatch and poisons that entity row
+    p2 = {k: np.array(v, copy=True) for k, v in tier._active.params.items()}
+    p2["ent"][bad_ent] = np.nan
+    tier.publish(p2)
+    tier.run_until_drained()
+    assert racy.state == "failed"
+    assert isinstance(racy.error, ValueError)
+    assert "dispatch version" in str(racy.error)
+    # requests not touching the poisoned row still serve on the new version
+    assert clean.state == "served" and clean.version == 1
+    _check_sums(tier)
+
+
+# ---------------------------------------------------------------------------
+# Faults-off / armed-inert bit-identity
+# ---------------------------------------------------------------------------
+def test_armed_inert_screen_is_bit_identical(kge_world):
+    m, params, known = kge_world
+    q = _tri(12, seed=12)
+    base = KGEServingTier(params, m, known, block_e=64, max_batch=8)
+    r0 = base.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    base.run_until_drained()
+    n0 = serving_program_cache_size()
+    armed = KGEServingTier(params, m, known, block_e=64, max_batch=8,
+                           serve_faults="screen")
+    assert armed.fault_plan is not None  # armed: output screen active
+    r1 = armed.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    armed.run_until_drained()
+    np.testing.assert_array_equal(r0.result, r1.result)
+    assert serving_program_cache_size() == n0  # no new programs
+    assert armed.stats["retried"] == 0 and armed.stats["failed"] == 0
+    _check_sums(armed)
+
+
+# ---------------------------------------------------------------------------
+# Combined: fault storm x live federation ticks x hot-swap (PR 6 x PR 8)
+# ---------------------------------------------------------------------------
+def test_fault_storm_under_live_ticks_and_hot_swap():
+    from repro.core.federation import FederationScheduler
+    from repro.core.ppat import PPATConfig
+    from repro.kge.data import synthesize_universe
+
+    kgs = synthesize_universe(
+        seed=1, scale=1 / 500,
+        kg_stats=[("A", 12, 90000, 300000), ("B", 10, 70000, 250000)],
+        alignments=[("A", "B", 30000)],
+    )
+    ctr = itertools.count()
+    sched = FederationScheduler(
+        kgs, dim=16, ppat_cfg=PPATConfig(steps=5, seed=0),
+        local_epochs=2, update_epochs=2, seed=0,
+        score_fn=lambda name: float(next(ctr)),
+    )
+    sched.initial_training()
+    dev = jax.devices()[0]
+    tier = KGEServingTier.for_owner(
+        sched, "A", block_e=64, max_batch=16,
+        replicas=2, devices=[dev, dev], home_slot=0,
+        serve_faults=ServeFaultPlan(crash=0.4, straggle=0.2, seed=3,
+                                    until=60, delay=0.005),
+        retry_limit=2, breaker_fails=2, probe_after=4,
+    )
+    v0 = tier.version
+    q = np.asarray(kgs["A"].test)
+    q = np.concatenate([q] * (24 // len(q) + 1))[:24] if len(q) < 24 else q
+    reqs = []
+    # phase 1: traffic into the storm, dispatched on v0
+    for i in range(0, 12, 3):
+        reqs.append(tier.submit_rank(q[i:i + 3, 0], q[i:i + 3, 1],
+                                     q[i:i + 3, 2]))
+        tier.step()
+    # phase 2: federation ticks flip versions mid-storm (in-flight batches
+    # finish — and RETRY — on their pinned version)
+    sched.run(max_ticks=2)
+    assert tier.version > v0
+    for i in range(12, 24, 3):
+        reqs.append(tier.submit_rank(q[i:i + 3, 0], q[i:i + 3, 1],
+                                     q[i:i + 3, 2]))
+    tier.run_until_drained()  # asserts served+shed+failed == submitted
+    # zero LOST requests: every single one resolved
+    assert all(r.done for r in reqs)
+    assert {r.state for r in reqs} <= {"served", "failed"}
+    assert tier.fault_counts.get("crash", 0) >= 1  # the storm actually hit
+    assert tier.stats["retried"] >= 1
+    # every served result is bit-equal to a per-call ranker on the exact
+    # version that served it
+    known = np.concatenate([kgs["A"].train, kgs["A"].valid, kgs["A"].test])
+    served = [r for r in reqs if r.state == "served"]
+    assert served  # the storm must not have failed everything
+    tr = sched.trainers["A"]
+    now = KGECandidateRanker(dict(tr.params), tr.model, known, block_e=64)
+    cur = tier.version
+    for i, r in enumerate(reqs):
+        if r.state == "served" and r.version == cur:
+            lo = (i * 3) % len(q)
+            np.testing.assert_array_equal(
+                r.result, now.rank_tails(q[lo:lo + 3, 0], q[lo:lo + 3, 1],
+                                         q[lo:lo + 3, 2])
+            )
+    _check_sums(tier)
+    assert tier.stats["publish_errors"] == 0
+
+
+def test_drain_accounting_invariant_guard(kge_world):
+    m, params, known = kge_world
+    tier = KGEServingTier(params, m, known, block_e=64)
+    q = _tri(2, seed=13)
+    tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+    tier.stats["submitted"] += 1  # sabotage the books
+    with pytest.raises(RuntimeError, match="accounting"):
+        tier.run_until_drained()

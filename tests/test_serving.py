@@ -332,6 +332,14 @@ def test_tier_replica_routing_least_loaded(kge_world, monkeypatch):
     tier.run_until_drained()
     assert dict(tier.replica_load()) == {0: 2, 1: 2}
     assert tier.stats["failed"] == 0
+    # sequential low-traffic batches (each drained before the next, so
+    # in-flight is always 0 at pick time) must STILL spread across the
+    # ring: lifetime dispatch count tie-breaks before slot
+    for i in range(2):
+        q = _tri(4, seed=86 + i)
+        tier.submit_rank(q[:, 0], q[:, 1], q[:, 2])
+        tier.run_until_drained()
+    assert dict(tier.replica_load()) == {0: 3, 1: 3}
 
 
 def test_tier_hot_swap_boundary_bit_equal(kge_world):
